@@ -1,0 +1,41 @@
+"""Figs. 8 & 9: impact of K on latency with computation / transmission /
+propagation breakdown, for MSI (b=2) and MSL (b=128)."""
+from __future__ import annotations
+
+from repro.core import IF, TR, ServiceChainRequest
+
+from .common import DEST, SOURCE, Row, candidate_sets, paper_instance, solve
+
+SCHEMES = ["exact", "bcd", "comp-ms", "comm-ms"]
+
+
+def run(quick: bool = False) -> list[Row]:
+    net, prof = paper_instance()
+    rows: list[Row] = []
+    cases = [(IF, 2, "fig8"), (TR, 128, "fig9")]
+    ks = [2, 3, 5] if quick else range(2, 8)
+    n_seeds = 3 if quick else 10
+    for mode, b, fig in cases:
+        req = ServiceChainRequest("resnet101", SOURCE, DEST, b, mode)
+        for K in ks:
+            for scheme in SCHEMES:
+                agg = [0.0, 0.0, 0.0]
+                n = 0
+                for seed in range(n_seeds):
+                    res = solve(scheme, net, prof, req, K, candidate_sets(K, seed))
+                    if res.feasible:
+                        n += 1
+                        agg[0] += res.latency.computation_s
+                        agg[1] += res.latency.transmission_s
+                        agg[2] += res.latency.propagation_s
+                if n == 0:
+                    rows.append(Row(f"{fig}_K{K}_{scheme}", float("nan"), "infeasible"))
+                    continue
+                comp, trans, prop = (v / n for v in agg)
+                rows.append(Row(
+                    f"{fig}_K{K}_{scheme}",
+                    (comp + trans + prop) * 1e6,
+                    f"comp_ms={comp*1e3:.2f};trans_ms={trans*1e3:.2f};"
+                    f"prop_ms={prop*1e3:.2f}",
+                ))
+    return rows

@@ -1,0 +1,49 @@
+"""Figs. 4 & 5: inference / training latency per batch vs (K, b) for every scheme.
+
+Averaged over seeds (paper: 10 trials).  The optimal scheme is the ILP-equivalent
+exact DP; `bcd`, `comp-ms`, `comm-ms` as in the paper.
+"""
+from __future__ import annotations
+
+from repro.core import IF, TR, ServiceChainRequest
+
+from .common import DEST, SOURCE, Row, candidate_sets, paper_instance, solve
+
+K_RANGE = range(2, 8)
+B_RANGE = [2**i for i in range(0, 9)]  # 1..256
+SCHEMES = ["exact", "bcd", "comp-ms", "comm-ms"]
+
+
+def run(mode: str = IF, seeds: int = 10, quick: bool = False) -> list[Row]:
+    net, prof = paper_instance()
+    ks = [2, 3, 5] if quick else list(K_RANGE)
+    bs = [2, 128] if quick else B_RANGE
+    n_seeds = 3 if quick else seeds
+    rows: list[Row] = []
+    fig = "fig4" if mode == IF else "fig5"
+    for K in ks:
+        for b in bs:
+            req = ServiceChainRequest("resnet101", SOURCE, DEST, b, mode)
+            for scheme in SCHEMES:
+                tot, n_feas, comp, trans, prop = 0.0, 0, 0.0, 0.0, 0.0
+                for seed in range(n_seeds):
+                    cands = candidate_sets(K, seed)
+                    res = solve(scheme, net, prof, req, K, cands)
+                    if res.feasible:
+                        n_feas += 1
+                        tot += res.latency_s
+                        comp += res.latency.computation_s
+                        trans += res.latency.transmission_s
+                        prop += res.latency.propagation_s
+                if n_feas == 0:
+                    rows.append(Row(f"{fig}_{mode}_K{K}_b{b}_{scheme}", float("nan"),
+                                    "infeasible"))
+                    continue
+                rows.append(Row(
+                    f"{fig}_{mode}_K{K}_b{b}_{scheme}",
+                    tot / n_feas * 1e6,
+                    f"latency_ms={tot / n_feas * 1e3:.2f};comp_ms={comp / n_feas * 1e3:.2f};"
+                    f"trans_ms={trans / n_feas * 1e3:.2f};prop_ms={prop / n_feas * 1e3:.2f};"
+                    f"feasible={n_feas}/{n_seeds}",
+                ))
+    return rows

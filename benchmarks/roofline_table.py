@@ -1,0 +1,56 @@
+"""Roofline table (EXPERIMENTS.md §Roofline): reads the dry-run artifacts and
+emits one row per (arch x shape x mesh) cell with the three terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and before/after vs the baseline
+snapshot when present."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import Row
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def _load(d: Path) -> dict:
+    out = {}
+    if not d.exists():
+        return out
+    for f in d.glob("*.json"):
+        j = json.loads(f.read_text())
+        out[(j["arch"], j["shape"], j["mesh"])] = j
+    return out
+
+
+def run(quick: bool = False) -> list[Row]:
+    cur = _load(ART / "dryrun")
+    base = _load(ART / "dryrun_baseline")
+    rows: list[Row] = []
+    if not cur:
+        return [Row("roofline_missing", float("nan"),
+                    "run: PYTHONPATH=src python -m repro.launch.dryrun --all")]
+    for key in sorted(cur):
+        j = cur[key]
+        name = f"roofline_{key[0]}_{key[1]}_{key[2]}"
+        if j.get("status") == "skipped":
+            rows.append(Row(name, 0.0, f"skipped:{j['reason'][:70]}"))
+            continue
+        if j.get("status") != "ok":
+            rows.append(Row(name, float("nan"), "error"))
+            continue
+        r = j["roofline"]
+        m = j["memory"]
+        t_dom = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        derived = (
+            f"tc={r['t_compute']:.3f}s;tm={r['t_memory']:.3f}s;"
+            f"tx={r['t_collective']:.3f}s;dominant={r['bottleneck']};"
+            f"frac={r['roofline_fraction']:.4f};useful={r['useful_flops_ratio']:.3f};"
+            f"mem={m['per_device_bytes']/2**30:.1f}GB;fits={m['fits_16gb']}")
+        b = base.get(key)
+        if b and b.get("status") == "ok":
+            bt = max(b["roofline"]["t_compute"], b["roofline"]["t_memory"],
+                     b["roofline"]["t_collective"])
+            derived += (f";baseline_tdom={bt:.3f}s;speedup={bt/max(t_dom,1e-12):.2f}x"
+                        f";baseline_mem={b['memory']['per_device_bytes']/2**30:.1f}GB")
+        rows.append(Row(name, t_dom * 1e6, derived))
+    return rows

@@ -1,0 +1,71 @@
+"""Benchmark driver — one suite per paper table/figure, plus the roofline table.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--suite NAME ...]
+
+Prints ``name,us_per_call,derived`` CSV rows (and echoes section headers on
+stderr so the CSV stays machine-readable).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _suites():
+    from . import breakdown, exec_time, latency_grid, worked_examples
+
+    def fig4(quick):
+        from repro.core import IF
+
+        return latency_grid.run(IF, quick=quick)
+
+    def fig5(quick):
+        from repro.core import TR
+
+        return latency_grid.run(TR, quick=quick)
+
+    suites = {
+        "fig4_inference_latency": fig4,
+        "fig5_training_latency": fig5,
+        "fig6_fig7_worked_examples": worked_examples.run,
+        "fig8_fig9_breakdown": breakdown.run,
+        "fig10_fig11_exec_time": exec_time.run,
+    }
+    try:
+        from . import roofline_table
+
+        suites["roofline"] = roofline_table.run
+    except ImportError:
+        pass
+    try:
+        from . import msl_pipeline
+
+        suites["msl_pipeline"] = msl_pipeline.run
+    except ImportError:
+        pass
+    return suites
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grids (CI-friendly)")
+    ap.add_argument("--suite", nargs="*", default=None)
+    args = ap.parse_args()
+    suites = _suites()
+    names = args.suite or list(suites)
+    print("name,us_per_call,derived")
+    for name in names:
+        if name not in suites:
+            print(f"unknown suite {name}; have {list(suites)}", file=sys.stderr)
+            continue
+        t0 = time.perf_counter()
+        print(f"# --- {name} ---", file=sys.stderr)
+        for row in suites[name](quick=args.quick):
+            print(row.csv())
+        print(f"# {name} done in {time.perf_counter()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

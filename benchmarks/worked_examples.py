@@ -1,0 +1,41 @@
+"""Figs. 6 & 7: optimal service path + model splitting worked examples.
+
+MSI (K=3, b=2) and MSL (K=3, b=128) with V^2 = {v7, v11} (the paper draws v7 as
+the chosen intermediate; its random second candidate is not printed, we pin
+{v7, v11}).  Prints the full plan of each scheme for side-by-side comparison with
+the paper's figures.
+"""
+from __future__ import annotations
+
+from repro.core import IF, TR, PlanEvaluator, ServiceChainRequest
+
+from .common import DEST, SOURCE, Row, paper_instance, solve
+
+SCHEMES = ["ilp", "bcd", "comp-ms", "comm-ms"]
+
+
+def _describe(res, ev) -> str:
+    if not res.feasible:
+        return "infeasible"
+    p = res.plan
+    segs = ";".join(f"F{k+1}=[{lo}-{hi}]@{n}"
+                    for k, ((lo, hi), n) in enumerate(zip(p.segments, p.placement)))
+    paths = ";".join("->".join(path) for path in p.paths)
+    lb = res.latency
+    return (f"{segs};paths={paths};comp_ms={lb.computation_s*1e3:.2f};"
+            f"trans_ms={lb.transmission_s*1e3:.2f};prop_ms={lb.propagation_s*1e3:.2f}")
+
+
+def run(quick: bool = False) -> list[Row]:
+    net, prof = paper_instance()
+    cands = [[SOURCE], ["v7", "v11"], [DEST]]
+    rows: list[Row] = []
+    for mode, b, fig in [(IF, 2, "fig6"), (TR, 128, "fig7")]:
+        req = ServiceChainRequest("resnet101", SOURCE, DEST, b, mode)
+        ev = PlanEvaluator(net, prof, req)
+        for scheme in SCHEMES:
+            res = solve(scheme, net, prof, req, 3, cands)
+            rows.append(Row(f"{fig}_{mode}_b{b}_{scheme}",
+                            res.latency_s * 1e6 if res.feasible else float("nan"),
+                            _describe(res, ev)))
+    return rows

@@ -1,0 +1,59 @@
+"""The paper's own scenario end-to-end: ResNet101 over NSFNET.
+
+Solves model splitting + placement + chaining with all four schemes (exact
+ILP-equivalent DP, BCD, COMP-MS, COMM-MS) for MSI (K=3, b=2) and MSL (K=3,
+b=128) and prints Fig. 6/7-style service paths.
+
+  PYTHONPATH=src python examples/msl_nsfnet.py
+"""
+from repro.core import (
+    IF,
+    TR,
+    PlanEvaluator,
+    ServiceChainRequest,
+    bcd_solve,
+    comm_ms_solve,
+    comp_ms_solve,
+    exact_solve,
+    nsfnet,
+    resnet101_profile,
+)
+
+SCHEMES = [("optimal", exact_solve), ("bcd", bcd_solve),
+           ("comp-ms", comp_ms_solve), ("comm-ms", comm_ms_solve)]
+
+
+def show(res, ev) -> None:
+    if not res.feasible:
+        print("   infeasible")
+        return
+    p = res.plan
+    for k, ((lo, hi), node) in enumerate(zip(p.segments, p.placement)):
+        print(f"   F{k+1} = layers {lo}-{hi} @ {node} "
+              f"(comp {ev.segment_comp_s(node, lo, hi)*1e3:.1f} ms)")
+    for k, path in enumerate(p.paths):
+        trans, prop = ev.cut_transfer_s(path, p.segments[k][1])
+        print(f"   S{k+2}: {'->'.join(path)} (trans {trans*1e3:.1f} ms, "
+              f"prop {prop*1e3:.1f} ms)")
+    lb = res.latency
+    print(f"   total {lb.total_s*1e3:.1f} ms  (comp {lb.computation_s*1e3:.1f} "
+          f"/ trans {lb.transmission_s*1e3:.1f} / prop {lb.propagation_s*1e3:.1f})"
+          f"  solved in {res.wall_time_s*1e3:.1f} ms")
+
+
+def main() -> None:
+    net = nsfnet(source="v4")
+    prof = resnet101_profile()
+    cands = [["v4"], ["v7", "v11"], ["v13"]]
+    for mode, b, title in [(IF, 2, "MSI (inference), K=3, b=2"),
+                           (TR, 128, "MSL (training), K=3, b=128")]:
+        print(f"\n=== {title} ===")
+        req = ServiceChainRequest("resnet101", "v4", "v13", b, mode)
+        ev = PlanEvaluator(net, prof, req)
+        for name, solver in SCHEMES:
+            print(f" {name}:")
+            show(solver(net, prof, req, 3, cands), ev)
+
+
+if __name__ == "__main__":
+    main()

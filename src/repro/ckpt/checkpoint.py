@@ -1,0 +1,126 @@
+"""Sharded numpy checkpointing: atomic, async, retention-managed.
+
+Each leaf is one .npy under the step directory (streams per-leaf, never
+materializes the full tree twice); the manifest records keypaths, shapes,
+dtypes, and the training step.  Writes go to a temp dir renamed into place
+(crash-atomic); a background thread makes saves non-blocking; `keep` bounds
+disk use.  Restore rebuilds the nested pytree from keypaths alone (dicts +
+lists), so no "like" tree is needed.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        elif hasattr(e, "name"):
+            parts.append(str(e.name))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def _set_nested(root, parts: list[str], value):
+    cur = root
+    for i, p in enumerate(parts[:-1]):
+        nxt_is_idx = parts[i + 1].isdigit()
+        if p.isdigit():
+            p = int(p)
+            while len(cur) <= p:
+                cur.append([] if nxt_is_idx else {})
+            if cur[p] == [] and not nxt_is_idx:
+                cur[p] = {}
+            cur = cur[p]
+        else:
+            if p not in cur:
+                cur[p] = [] if nxt_is_idx else {}
+            cur = cur[p]
+    last = parts[-1]
+    if last.isdigit():
+        last = int(last)
+        while len(cur) <= last:
+            cur.append(None)
+        cur[last] = value
+    else:
+        cur[last] = value
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, blocking: bool = True) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        if blocking:
+            self._write(step, host_tree)
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=self._write,
+                                            args=(step, host_tree), daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree) -> None:
+        tmp = self.dir / f".tmp_step_{step}_{time.time_ns()}"
+        tmp.mkdir(parents=True)
+        leaves = jax.tree_util.tree_flatten_with_path(host_tree)[0]
+        manifest = {"step": step, "leaves": []}
+        for i, (path, leaf) in enumerate(leaves):
+            fname = f"leaf_{i:05d}.npy"
+            np.save(tmp / fname, leaf)
+            manifest["leaves"].append({
+                "path": _path_str(path), "file": fname,
+                "shape": list(np.shape(leaf)), "dtype": str(np.asarray(leaf).dtype),
+            })
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        final = self.dir / f"step_{step:010d}"
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("step_*"))
+        for old in ckpts[: -self.keep]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> int | None:
+        ckpts = sorted(self.dir.glob("step_*"))
+        if not ckpts:
+            return None
+        return int(ckpts[-1].name.split("_")[1])
+
+    def restore(self, step: int | None = None):
+        """Returns (step, tree) or (None, None) when no checkpoint exists."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        d = self.dir / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        root: dict = {}
+        for leaf in manifest["leaves"]:
+            arr = np.load(d / leaf["file"])
+            _set_nested(root, leaf["path"].split("/"), arr)
+        return manifest["step"], root

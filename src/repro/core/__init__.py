@@ -1,0 +1,48 @@
+"""Core — the paper's contribution: joint optimization of model splitting,
+placement, and chaining for SFC-based multi-hop split learning/inference.
+
+Solvers:
+  * `ilp_solve`   — faithful MILP of Eqs. (1)-(15), HiGHS branch-and-bound (exact).
+  * `exact_solve` — provably equivalent joint DP (fast optimal oracle).
+  * `bcd_solve`   — the paper's BCD heuristic (Alg. 1: K-seq segmentation + DFTS).
+  * `comp_ms_solve` / `comm_ms_solve` — the paper's comparison schemes.
+"""
+from .baselines import comm_ms_solve, comp_ms_solve
+from .bcd import SolveResult, bcd_solve
+from .costmodel import (
+    BW,
+    FW,
+    IF,
+    TR,
+    CPU_XEON_6226R,
+    GPU_RTX_A6000,
+    ComputeModel,
+    LayerProfile,
+    ModelProfile,
+    cuts_from_segments,
+    even_split,
+    segments_from_sizes,
+    tpu_group_compute_model,
+    validate_segments,
+)
+from .dfts import dfts
+from .exact import exact_solve
+from .ilp import ilp_solve
+from .network import LinkSpec, NodeSpec, PhysicalNetwork, transmission_time_s
+from .plan import LatencyBreakdown, Plan, PlanEvaluator, ServiceChainRequest
+from .resnet101_profile import resnet101_profile
+from .segmentation import k_sequence_segmentation
+from .topology import nsfnet, random_network, tpu_pod_topology
+
+__all__ = [
+    "BW", "FW", "IF", "TR",
+    "CPU_XEON_6226R", "GPU_RTX_A6000", "ComputeModel",
+    "LayerProfile", "ModelProfile", "LatencyBreakdown",
+    "Plan", "PlanEvaluator", "ServiceChainRequest", "SolveResult",
+    "LinkSpec", "NodeSpec", "PhysicalNetwork",
+    "bcd_solve", "exact_solve", "ilp_solve", "comp_ms_solve", "comm_ms_solve",
+    "dfts", "k_sequence_segmentation",
+    "nsfnet", "random_network", "tpu_pod_topology", "resnet101_profile",
+    "even_split", "segments_from_sizes", "cuts_from_segments", "validate_segments",
+    "transmission_time_s", "tpu_group_compute_model",
+]

@@ -1,0 +1,91 @@
+"""DFTS — shortest path tour search for model placement + chaining given a fixed
+splitting y (paper Sec. V-C, [22], [24]).
+
+Implemented as the layered-graph / stage-wise multi-source Dijkstra over the
+modified augmented network: stage k expands every candidate i in V^k by charging
+the imaginary-link cost c^k_{i, v_hat_ik} (compute, Eq. (17), FW + BW if training)
+and physical-link costs c^k_{i,j} (Sec. V-C) that depend on the smashed-data size
+of the preceding cut.  This attains the optimal placement + chaining for the given
+y because the formulation has no link-capacity coupling between subpaths — each
+subpath is independently a shortest path.  Complexity O((K+1) E log V), matching
+the paper's Sec. V-D.
+"""
+from __future__ import annotations
+
+from .costmodel import BW, FW, TR, ModelProfile
+from .network import PhysicalNetwork
+from .plan import Plan, PlanEvaluator, ServiceChainRequest
+
+INF = float("inf")
+
+
+def _backtrack(parent: dict[str, str | None], end: str, sources: set[str]) -> list[str]:
+    path, cur = [end], end
+    while cur not in sources:
+        cur = parent[cur]
+        assert cur is not None, "broken parent chain"
+        path.append(cur)
+    return path[::-1]
+
+
+def dfts(
+    net: PhysicalNetwork,
+    profile: ModelProfile,
+    request: ServiceChainRequest,
+    segments: list[tuple[int, int]],
+    candidates: list[list[str]],
+) -> Plan | None:
+    """Optimal placement + chaining for fixed segments.  Returns None if every
+    placement is capacity-infeasible (imaginary links pruned, Sec. V-C)."""
+    K = len(segments)
+    assert len(candidates) == K
+    ev = PlanEvaluator(net, profile, request)
+    b = request.batch_size
+    training = request.mode == TR
+
+    # stage 1: enter F^1 at each feasible candidate (subpath S_1 is uncharged in
+    # Eq. (16); the paper pins V^1 = {s}).
+    best: dict[str, float] = {}
+    entry_path: list[dict[str, list[str]]] = [dict() for _ in range(K)]
+    pred_node: list[dict[str, str]] = [dict() for _ in range(K)]
+    lo, hi = segments[0]
+    for i in candidates[0]:
+        if ev.segment_fits(i, lo, hi):
+            best[i] = ev.segment_comp_s(i, lo, hi)
+            entry_path[0][i] = [i]
+    if not best:
+        return None
+
+    for k in range(1, K):
+        cut = segments[k - 1][1]
+        fw_bytes = b * profile.cut_bytes(cut, FW)
+        bw_bytes = b * profile.cut_bytes(cut, BW) if training else None
+        dist, parent = net.dijkstra(dict(best), fw_bytes, bw_bytes)
+        lo, hi = segments[k]
+        nxt: dict[str, float] = {}
+        for i in candidates[k]:
+            if dist[i] < INF and ev.segment_fits(i, lo, hi):
+                nxt[i] = dist[i] + ev.segment_comp_s(i, lo, hi)
+                path = _backtrack(parent, i, set(best))
+                entry_path[k][i] = path
+                pred_node[k][i] = path[0]
+        if not nxt:
+            return None
+        best = nxt
+
+    # tail subpath S_{K+1}: psi_K = 0, propagation-only (FW + BW if training).
+    tail_bw = 0.0 if training else None
+    dist, parent = net.dijkstra(dict(best), 0.0, tail_bw)
+    if dist[request.destination] == INF:
+        return None
+    tail = _backtrack(parent, request.destination, set(best))
+
+    # backtrack placement and subpaths
+    placement = [""] * K
+    placement[K - 1] = tail[0]
+    for k in range(K - 1, 0, -1):
+        placement[k - 1] = pred_node[k][placement[k]]
+    paths = [entry_path[k][placement[k]] for k in range(1, K)]
+    tail_path = tail if len(tail) > 1 else []
+    return Plan(segments=list(segments), placement=placement, paths=paths,
+                tail_path=tail_path)

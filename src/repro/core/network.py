@@ -1,0 +1,138 @@
+"""Physical network model G = (V, E) (paper Sec. III-C).
+
+Directed links; each link (i, j) carries a forward-direction bandwidth/propagation
+delay (used by activations flowing i->j) and a backward-direction pair (used by
+gradients flowing back along the same subpath, i.e. j->i traffic charged on link
+(i, j) per the paper's R^BW_{i,j} convention).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+from .costmodel import BW, FW, ComputeModel
+
+
+@dataclass(frozen=True)
+class NodeSpec:
+    name: str
+    compute: ComputeModel
+    mem_capacity: float  # C_i^mem, bytes
+    disk_capacity: float  # C_i^disk, bytes
+
+
+@dataclass(frozen=True)
+class LinkSpec:
+    """R^FW/R^BW in bits/s, d^FW/d^BW in seconds."""
+
+    bw_fw: float
+    bw_bw: float
+    delay_fw: float
+    delay_bw: float
+
+    def rate(self, direction: str) -> float:
+        return self.bw_fw if direction == FW else self.bw_bw
+
+    def delay(self, direction: str) -> float:
+        return self.delay_fw if direction == FW else self.delay_bw
+
+
+def transmission_time_s(size_bytes: float, rate_bps: float) -> float:
+    """T^trans = b*psi / R  (Eq. 18); sizes in bytes, rates in bits/s."""
+    return size_bytes * 8.0 / rate_bps
+
+
+@dataclass
+class PhysicalNetwork:
+    nodes: dict[str, NodeSpec] = field(default_factory=dict)
+    links: dict[tuple[str, str], LinkSpec] = field(default_factory=dict)
+
+    def add_node(self, spec: NodeSpec) -> None:
+        self.nodes[spec.name] = spec
+
+    def add_link(self, u: str, v: str, spec: LinkSpec) -> None:
+        assert u in self.nodes and v in self.nodes
+        self.links[(u, v)] = spec
+
+    def add_bidirectional(self, u: str, v: str, spec: LinkSpec) -> None:
+        self.add_link(u, v, spec)
+        self.add_link(v, u, spec)
+
+    @property
+    def node_names(self) -> list[str]:
+        return list(self.nodes)
+
+    def out_edges(self, u: str) -> list[tuple[str, LinkSpec]]:
+        return [(v, s) for (a, v), s in self.links.items() if a == u]
+
+    # ------------------------------------------------------------------ routing
+    def edge_cost(self, u: str, v: str, fw_bytes: float, bw_bytes: float | None) -> float:
+        """Per-link chaining cost c^k_{i,j} (Sec. V-C): FW transfer (+ BW if training)."""
+        link = self.links[(u, v)]
+        cost = transmission_time_s(fw_bytes, link.bw_fw) + link.delay_fw
+        if bw_bytes is not None:
+            cost += transmission_time_s(bw_bytes, link.bw_bw) + link.delay_bw
+        return cost
+
+    def dijkstra(
+        self,
+        sources: dict[str, float],
+        fw_bytes: float,
+        bw_bytes: float | None,
+    ) -> tuple[dict[str, float], dict[str, str | None]]:
+        """Multi-source Dijkstra with smashed-data-dependent link costs.
+
+        `sources` maps node -> initial distance (enables the stage-wise shortest
+        path *tour* with a single Dijkstra per stage, as in the DFTS layered
+        search).  Returns (dist, parent).
+        """
+        adj: dict[str, list[tuple[str, float]]] = {n: [] for n in self.nodes}
+        for (u, v), _ in self.links.items():
+            adj[u].append((v, self.edge_cost(u, v, fw_bytes, bw_bytes)))
+        dist = {n: float("inf") for n in self.nodes}
+        parent: dict[str, str | None] = {n: None for n in self.nodes}
+        pq: list[tuple[float, str]] = []
+        for s, d0 in sources.items():
+            dist[s] = min(dist[s], d0)
+            heapq.heappush(pq, (dist[s], s))
+        while pq:
+            d, u = heapq.heappop(pq)
+            if d > dist[u]:
+                continue
+            for v, w in adj[u]:
+                nd = d + w
+                if nd < dist[v] - 1e-18:
+                    dist[v] = nd
+                    parent[v] = u
+                    heapq.heappush(pq, (nd, v))
+        return dist, parent
+
+    def shortest_path(
+        self, src: str, dst: str, fw_bytes: float, bw_bytes: float | None
+    ) -> tuple[float, list[str]]:
+        """Least-cost loop-free path src->dst for a given smashed-data size."""
+        if src == dst:
+            return 0.0, [src]
+        dist, parent = self.dijkstra({src: 0.0}, fw_bytes, bw_bytes)
+        if dist[dst] == float("inf"):
+            raise ValueError(f"no path {src} -> {dst}")
+        path, cur = [dst], dst
+        while cur != src:
+            cur = parent[cur]  # type: ignore[assignment]
+            assert cur is not None
+            path.append(cur)
+        return dist[dst], path[::-1]
+
+    def path_cost_breakdown(
+        self, path: list[str], fw_bytes: float, bw_bytes: float | None
+    ) -> tuple[float, float]:
+        """(transmission_s, propagation_s) along a concrete path (FW + optional BW)."""
+        trans = prop = 0.0
+        for u, v in zip(path, path[1:]):
+            link = self.links[(u, v)]
+            trans += transmission_time_s(fw_bytes, link.bw_fw)
+            prop += link.delay_fw
+            if bw_bytes is not None:
+                trans += transmission_time_s(bw_bytes, link.bw_bw)
+                prop += link.delay_bw
+        return trans, prop

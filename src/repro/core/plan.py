@@ -1,0 +1,132 @@
+"""Service chain requests, plans (splitting + placement + chaining) and the latency
+objective T(x, y, b, mode) with its computation / transmission / propagation
+breakdown (paper Eqs. (1), (16)-(18); Figs. 8-9 breakdowns)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .costmodel import BW, FW, IF, TR, ModelProfile, dirs_for_mode, validate_segments
+from .network import PhysicalNetwork
+
+
+@dataclass(frozen=True)
+class ServiceChainRequest:
+    """R = (id, s, d, b, mode) — paper Sec. III-A."""
+
+    model_id: str
+    source: str
+    destination: str
+    batch_size: int
+    mode: str  # IF | TR
+
+    def __post_init__(self) -> None:
+        assert self.mode in (IF, TR)
+
+
+@dataclass
+class LatencyBreakdown:
+    computation_s: float = 0.0
+    transmission_s: float = 0.0
+    propagation_s: float = 0.0
+
+    @property
+    def total_s(self) -> float:
+        return self.computation_s + self.transmission_s + self.propagation_s
+
+    def __add__(self, other: "LatencyBreakdown") -> "LatencyBreakdown":
+        return LatencyBreakdown(
+            self.computation_s + other.computation_s,
+            self.transmission_s + other.transmission_s,
+            self.propagation_s + other.propagation_s,
+        )
+
+
+@dataclass
+class Plan:
+    """A complete solution: y (segments), placement, and chaining subpaths.
+
+    segments:   K 1-indexed inclusive layer ranges [lo, hi].
+    placement:  node name hosting each sub-model F^k.
+    paths:      K-1 physical node paths; paths[k] carries the smashed data of the
+                cut after segment k (placement[k] -> placement[k+1]).
+    tail_path:  physical path placement[K-1] -> destination (subpath S_{K+1};
+                psi_K = 0 so only propagation is charged, per Eq. (16)).
+    """
+
+    segments: list[tuple[int, int]]
+    placement: list[str]
+    paths: list[list[str]]
+    tail_path: list[str] = field(default_factory=list)
+
+    @property
+    def K(self) -> int:
+        return len(self.segments)
+
+    def cuts(self) -> list[int]:
+        return [hi for (_, hi) in self.segments[:-1]]
+
+
+class PlanEvaluator:
+    """Evaluates T(x, y, b, mode) and checks constraints for concrete plans."""
+
+    def __init__(self, net: PhysicalNetwork, profile: ModelProfile,
+                 request: ServiceChainRequest):
+        self.net = net
+        self.profile = profile
+        self.request = request
+
+    # ------------------------------------------------------------- feasibility
+    def segment_fits(self, node: str, lo: int, hi: int) -> bool:
+        """Constraints (14) disk and (15) memory for sub-model [lo, hi] at node."""
+        spec = self.net.nodes[node]
+        if self.profile.seg_disk_bytes(lo, hi) > spec.disk_capacity:
+            return False
+        mem = self.profile.seg_mem_bytes(lo, hi)
+        mem += self.request.batch_size * self.profile.seg_peak_smashed(lo, hi, self.request.mode)
+        return mem <= spec.mem_capacity
+
+    def check(self, plan: Plan) -> None:
+        validate_segments(plan.segments, self.profile.L)
+        assert len(plan.placement) == plan.K and len(plan.paths) == plan.K - 1
+        for (lo, hi), node in zip(plan.segments, plan.placement):
+            if not self.segment_fits(node, lo, hi):
+                raise ValueError(f"segment [{lo},{hi}] violates capacity at {node}")
+        for k, path in enumerate(plan.paths):
+            assert path[0] == plan.placement[k] and path[-1] == plan.placement[k + 1]
+            for u, v in zip(path, path[1:]):
+                assert (u, v) in self.net.links, f"missing link {u}->{v}"
+
+    # ------------------------------------------------------------------ latency
+    def segment_comp_s(self, node: str, lo: int, hi: int) -> float:
+        """T^comp for sub-model [lo, hi] at node, FW (+BW if training) — Eq. (17)."""
+        cm = self.net.nodes[node].compute
+        b = self.request.batch_size
+        total = 0.0
+        for d in dirs_for_mode(self.request.mode):
+            total += cm.comp_time_s(b, self.profile.seg_flops(lo, hi, d))
+        return total
+
+    def cut_transfer_s(self, path: list[str], cut_after: int) -> tuple[float, float]:
+        """(transmission, propagation) shipping delta_cut along `path`, FW (+BW)."""
+        b = self.request.batch_size
+        fw_bytes = b * self.profile.cut_bytes(cut_after, FW)
+        bw_bytes = (b * self.profile.cut_bytes(cut_after, BW)
+                    if self.request.mode == TR else None)
+        return self.net.path_cost_breakdown(path, fw_bytes, bw_bytes)
+
+    def evaluate(self, plan: Plan) -> LatencyBreakdown:
+        out = LatencyBreakdown()
+        for (lo, hi), node in zip(plan.segments, plan.placement):
+            out.computation_s += self.segment_comp_s(node, lo, hi)
+        for k, path in enumerate(plan.paths):
+            cut = plan.segments[k][1]
+            trans, prop = self.cut_transfer_s(path, cut)
+            out.transmission_s += trans
+            out.propagation_s += prop
+        if plan.tail_path:  # psi_K = 0: propagation only
+            _, prop = self.net.path_cost_breakdown(plan.tail_path, 0.0, None)
+            out.propagation_s += prop
+        return out
+
+    def latency_s(self, plan: Plan) -> float:
+        return self.evaluate(plan).total_s

@@ -1,0 +1,86 @@
+"""K-sequence segmentation via dynamic programming (paper Alg. 2, [23]).
+
+Optimizes the model splitting y_t for a *fixed* placement + chaining x_{t-1}:
+segment k's cost is its compute time at the node currently hosting F^k plus the
+cost of shipping its output cut along the current (k)th inter-stage path.
+Capacity violations (constraints (14)-(15)) yield +inf, as in the paper.
+
+We index dp[k][e] = min cost of covering layers 1..e with k segments (the paper's
+dp_{k,l} covers 1..l-1; the shift removes its off-by-one at the last segment).
+Complexity O(K L^2) segment evaluations, per Sec. V-D.
+"""
+from __future__ import annotations
+
+from .costmodel import BW, FW, TR, ModelProfile
+from .network import PhysicalNetwork
+from .plan import Plan, PlanEvaluator, ServiceChainRequest
+
+INF = float("inf")
+
+
+def _segment_cost(
+    ev: PlanEvaluator,
+    profile: ModelProfile,
+    net: PhysicalNetwork,
+    request: ServiceChainRequest,
+    k: int,
+    K: int,
+    lo: int,
+    hi: int,
+    placement: list[str],
+    paths: list[list[str]],
+) -> float:
+    """T(x^k, 1^k_{lo,hi}, b, mode): compute at placement[k] + outgoing cut shipping."""
+    node = placement[k]
+    if not ev.segment_fits(node, lo, hi):
+        return INF
+    cost = ev.segment_comp_s(node, lo, hi)
+    if k < K - 1:  # ship delta_hi along the existing (k+1)-th subpath
+        trans, prop = ev.cut_transfer_s(paths[k], hi)
+        cost += trans + prop
+    return cost
+
+
+def k_sequence_segmentation(
+    net: PhysicalNetwork,
+    profile: ModelProfile,
+    request: ServiceChainRequest,
+    plan: Plan,
+) -> list[tuple[int, int]] | None:
+    """Re-split L layers into K segments for plan's fixed placement/chaining."""
+    K, L = plan.K, profile.L
+    ev = PlanEvaluator(net, profile, request)
+    placement, paths = plan.placement, plan.paths
+
+    def segcost(k: int, lo: int, hi: int) -> float:
+        return _segment_cost(ev, profile, net, request, k, K, lo, hi, placement, paths)
+
+    # dp[k][e]: k segments covering layers 1..e; e in [k, L-(K-k)]
+    dp = [[INF] * (L + 1) for _ in range(K + 1)]
+    choice = [[-1] * (L + 1) for _ in range(K + 1)]
+    for e in range(1, L - K + 2):
+        dp[1][e] = segcost(0, 1, e)
+    for k in range(2, K + 1):
+        e_vals = range(k, L - K + k + 1) if k < K else [L]
+        for e in e_vals:
+            for e2 in range(k - 1, e):
+                prev = dp[k - 1][e2]
+                if prev == INF:
+                    continue
+                c = prev + segcost(k - 1, e2 + 1, e)
+                if c < dp[k][e]:
+                    dp[k][e] = c
+                    choice[k][e] = e2
+    if dp[K][L] == INF:
+        return None
+    cuts = []
+    e = L
+    for k in range(K, 1, -1):
+        e = choice[k][e]
+        cuts.append(e)
+    cuts.reverse()
+    segments, lo = [], 1
+    for c in cuts + [L]:
+        segments.append((lo, c))
+        lo = c + 1
+    return segments

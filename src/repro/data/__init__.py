@@ -1,0 +1,3 @@
+from .pipeline import BatchSpec, Prefetcher, SyntheticLM, shard_batch
+
+__all__ = ["BatchSpec", "SyntheticLM", "Prefetcher", "shard_batch"]

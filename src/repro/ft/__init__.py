@@ -1,0 +1,3 @@
+from .manager import ElasticPlanController, FTEvent, StepTimeCalibrator
+
+__all__ = ["ElasticPlanController", "FTEvent", "StepTimeCalibrator"]

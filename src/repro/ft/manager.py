@@ -1,0 +1,119 @@
+"""Fault tolerance & elasticity: checkpoint/restart, node-failure re-planning,
+straggler mitigation — the paper's planner as the recovery mechanism.
+
+On a node failure the controller (1) drops the node from the planner topology,
+(2) re-solves splitting/placement/chaining with BCD (tens of ms — Fig. 10's
+headline), (3) restores the last checkpoint and re-jits the step for the new
+plan.  Straggler mitigation follows the paper's kappa_i calibration: per-node
+step times are re-fit by OLS (kappa(b, phi) = (alpha b + beta) phi, Sec. VI-A2)
+and the planner re-runs when the refreshed model predicts a better chain.
+
+At 1000+ nodes the same machinery applies per pod-group: the planner graph is
+the pod-level topology (DESIGN.md Sec. 2.2), so re-planning cost is O(groups),
+not O(chips), and checkpoint restore is the only O(params) step.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core import ComputeModel, PhysicalNetwork, bcd_solve
+from ..core.costmodel import ModelProfile
+from ..core.plan import ServiceChainRequest
+
+
+@dataclass
+class StepTimeCalibrator:
+    """Online OLS re-fit of kappa_i from measured (b, phi, seconds) samples."""
+
+    samples: dict[str, list[tuple[float, float, float]]] = field(
+        default_factory=dict)
+
+    def record(self, node: str, batch: int, flops: float, seconds: float):
+        self.samples.setdefault(node, []).append((batch, flops, seconds))
+
+    def fit(self, node: str) -> ComputeModel | None:
+        """OLS over t = (alpha*b + beta) * phi  =>  t/phi = alpha*b + beta."""
+        pts = self.samples.get(node, [])
+        if len(pts) < 2:
+            return None
+        b = np.array([p[0] for p in pts])
+        y = np.array([p[2] / max(p[1], 1.0) for p in pts])
+        alpha, beta = np.polyfit(b, y, 1)
+        # ComputeModel constants are in ms per FLOP (paper Table II convention)
+        return ComputeModel(name=f"fitted-{node}",
+                            pieces=((math.inf, alpha * 1e3, beta * 1e3),))
+
+
+@dataclass
+class FTEvent:
+    step: int
+    kind: str  # failure | straggler | replan | restore
+    detail: str
+
+
+class ElasticPlanController:
+    """Holds the current plan; re-plans on failures/stragglers."""
+
+    def __init__(self, net: PhysicalNetwork, profile: ModelProfile,
+                 request: ServiceChainRequest, K: int,
+                 candidates: list[list[str]]):
+        self.net = net
+        self.profile = profile
+        self.request = request
+        self.K = K
+        self.candidates = [list(c) for c in candidates]
+        self.calibrator = StepTimeCalibrator()
+        self.events: list[FTEvent] = []
+        self.result = bcd_solve(net, profile, request, K, self.candidates)
+        if not self.result.feasible:
+            raise ValueError("initial plan infeasible")
+
+    @property
+    def plan(self):
+        return self.result.plan
+
+    def fail_node(self, node: str, step: int = -1):
+        """Drop a failed node everywhere and re-plan (elastic scaling down)."""
+        self.candidates = [[n for n in c if n != node] or c
+                           for c in self.candidates]
+        for c in self.candidates:
+            if not c:
+                raise ValueError("no candidates left for a stage")
+        self.events.append(FTEvent(step, "failure", node))
+        return self._replan(step, f"after losing {node}")
+
+    def observe_step(self, step: int, node: str, batch: int, flops: float,
+                     seconds: float, slowdown_threshold: float = 1.5):
+        """Record a measured per-node step time; re-fit + re-plan if the node
+        is now `slowdown_threshold`x slower than its model predicts."""
+        self.calibrator.record(node, batch, flops, seconds)
+        predicted = self.net.nodes[node].compute.comp_time_s(batch, flops)
+        if predicted > 0 and seconds > slowdown_threshold * predicted:
+            fitted = self.calibrator.fit(node)
+            if fitted is not None:
+                spec = self.net.nodes[node]
+                self.net.nodes[node] = type(spec)(
+                    spec.name, fitted, spec.mem_capacity, spec.disk_capacity)
+                self.events.append(FTEvent(step, "straggler",
+                                           f"{node} {seconds/predicted:.1f}x"))
+                return self._replan(step, f"straggler {node}")
+        return None
+
+    def _replan(self, step: int, why: str):
+        t0 = time.perf_counter()
+        res = bcd_solve(self.net, self.profile, self.request, self.K,
+                        self.candidates)
+        if not res.feasible:
+            raise ValueError(f"re-plan infeasible ({why})")
+        changed = res.plan.placement != self.result.plan.placement or \
+            res.plan.segments != self.result.plan.segments
+        self.result = res
+        self.events.append(FTEvent(
+            step, "replan",
+            f"{why}: {res.plan.placement} segs={res.plan.segments} "
+            f"in {(time.perf_counter()-t0)*1e3:.1f}ms changed={changed}"))
+        return res.plan

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the substrate's compute hot spots (the paper itself
+has no kernel-level contribution — see DESIGN.md Sec. 2.3): flash attention,
+per-expert grouped matmul, RG-LRU recurrence, Mamba-2 SSD intra-chunk.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+ops.py (jit'd wrappers), ref.py (pure-jnp oracles).  Validated in interpret
+mode on CPU; Mosaic lowering on real TPUs.
+"""
+from . import ops, ref
+from .flash_attention import flash_attention
+from .moe_gmm import expert_matmul
+from .rglru import rglru_scan
+from .ssd import ssd_intra_chunk
+
+__all__ = ["ops", "ref", "flash_attention", "expert_matmul", "rglru_scan",
+           "ssd_intra_chunk"]

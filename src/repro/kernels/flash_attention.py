@@ -1,0 +1,132 @@
+"""Flash attention Pallas TPU kernel (GQA, causal, sliding-window, softcap).
+
+TPU adaptation of the memory-bound attention hot spot: the (Bq, Bk) score tile
+lives in VMEM, the running max / normalizer / accumulator persist in VMEM
+scratch across the sequential kv-block grid dimension, and only the final
+normalized output tile is written back to HBM.  MXU-aligned tiles: Bq, Bk
+multiples of 128 lanes; fp32 accumulation regardless of input dtype.
+
+Grid: (B, Hq, nq, nk) with ("parallel","parallel","parallel","arbitrary")
+semantics — nk is the sequential reduction dimension.  GQA: the kv BlockSpec
+index-maps query head h to kv head h // (Hq // Hkv), so kv tiles are fetched
+once per kv head group.
+
+Validated in interpret mode against ref.reference_attention (tests/test_kernels).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, nk: int,
+                  seq_q: int, seq_kv: int, causal: bool, window: int | None,
+                  softcap: float | None):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (Bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (Bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_idx = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_idx = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = (q_idx < seq_q) & (k_idx < seq_kv)
+    if causal:
+        mask &= q_idx >= k_idx
+    if window is not None:
+        mask &= q_idx - k_idx < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    v = v_ref[0, 0].astype(jnp.float32)
+    l_scr[...] = corr * l_prev + jnp.sum(p, axis=1)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "block_q",
+                     "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd) -> (B, Sq, Hq, hd)."""
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    block_q = min(block_q, max(Sq, 1))
+    block_k = min(block_k, max(Skv, 1))
+    nq = -(-Sq // block_q)
+    nk = -(-Skv // block_k)
+    pad_q = nq * block_q - Sq
+    pad_k = nk * block_k - Skv
+    qt = jnp.moveaxis(q, 2, 1)  # (B, Hq, Sq, hd)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k, nk=nk,
+        seq_q=Sq, seq_kv=Skv, causal=causal, window=window, softcap=softcap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, nq * block_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :Sq]
+    return jnp.moveaxis(out, 1, 2)

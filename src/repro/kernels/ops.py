@@ -1,0 +1,56 @@
+"""jit'd public wrappers around the Pallas kernels (interpret=True on CPU, real
+Mosaic lowering on TPU), including the composed SSD forward that pairs the
+intra-chunk kernel with the jnp inter-chunk recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .moe_gmm import expert_matmul
+from .rglru import rglru_scan
+from .ssd import ssd_intra_chunk
+
+
+def ssd_forward(xh, dtv, A, Bm, Cm, h0=None, chunk: int = 256,
+                interpret: bool | None = None):
+    """Full SSD layer forward via the Pallas intra-chunk kernel.
+
+    xh: (B, S, H, P); dtv: (B, S, H) (softplus'd); A: (H,) positive rates;
+    Bm, Cm: (B, S, N).  Matches models.layers._ssd_chunked (the oracle).
+    Returns (y (B, S, H, P) fp32, h_last (B, H, P, N) fp32).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    assert nc * Q == S, "sequence must divide the chunk size"
+    xk = jnp.moveaxis(xh.reshape(Bsz, nc, Q, H, P), 3, 2)  # (B, nc, H, Q, P)
+    dtk = jnp.moveaxis(dtv.reshape(Bsz, nc, Q, H), 3, 2)  # (B, nc, H, Q)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+    y_intra, chunk_states, in_decay = ssd_intra_chunk(
+        xk, Bc, Cc, dtk, A, interpret=interpret)
+
+    # inter-chunk recurrence (tiny, sequential): h_{c} = decay_c * h_{c-1} + S_c
+    chunk_decay = in_decay[..., -1]  # (B, nc, H)
+    h_init = (h0.astype(jnp.float32) if h0 is not None
+              else jnp.zeros((Bsz, H, P, N), jnp.float32))
+
+    def step(h, inp):
+        cs, cd = inp  # (B,H,N,P), (B,H)
+        h_new = h * cd[:, :, None, None] + jnp.moveaxis(cs, 2, 3)
+        return h_new, h
+
+    h_last, h_prevs = jax.lax.scan(
+        step, h_init, (jnp.moveaxis(chunk_states, 1, 0),
+                       jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B, nc, H, P, N) state BEFORE chunk
+    y_inter = jnp.einsum("bcqn,bchq,bchpn->bchqp", Cc.astype(jnp.float32),
+                         in_decay, h_prevs)
+    y = jnp.moveaxis(y_intra + y_inter, 2, 3).reshape(Bsz, S, H, P)
+    return y, h_last
+
+
+__all__ = ["flash_attention", "expert_matmul", "rglru_scan", "ssd_intra_chunk",
+           "ssd_forward"]

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the shape/dtype
+sweeps in tests/test_kernels.py assert against)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                        scale=None):
+    """Naive attention, same semantics as kernels.flash_attention."""
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    q32 = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q32, k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        mask &= qi - ki < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def reference_expert_matmul(x, w, *, activation="none"):
+    out = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    if activation == "silu":
+        out = out * jax.nn.sigmoid(out)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out, approximate=True)
+    return out.astype(x.dtype)
+
+
+def reference_rglru_scan(a, b):
+    """h_t = a_t h_{t-1} + b_t via associative scan (the model's own path)."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def reference_ssd_intra_chunk(x, Bm, Cm, dt, A):
+    """Chunk-local SSD terms; mirrors models.layers._ssd_chunked's intra part.
+
+    x: (B, nc, H, Q, P); Bm/Cm: (B, nc, Q, N); dt: (B, nc, H, Q); A: (H,)>0.
+    """
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    dA = dt32 * (-A)[None, None, :, None]  # (B, nc, H, Q)
+    cum = jnp.cumsum(dA, axis=-1)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cm.astype(jnp.float32),
+                        Bm.astype(jnp.float32))
+    Q = x.shape[3]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    delta = cum[..., :, None] - cum[..., None, :]  # (B,nc,H,Q,K)
+    decay = jnp.exp(jnp.where(causal, delta, -jnp.inf))
+    w = scores[:, :, None] * decay
+    w = w * dt32[:, :, :, None, :]
+    y = jnp.einsum("bchqk,bchkp->bchqp", w, x32)
+    end_decay = jnp.exp(cum[..., -1:] - cum) * dt32  # (B, nc, H, Q)
+    hc = jnp.einsum("bchq,bcqn,bchqp->bchnp", end_decay,
+                    Bm.astype(jnp.float32), x32)
+    return y, hc, jnp.exp(cum)

@@ -1,0 +1,88 @@
+"""Mamba-2 SSD intra-chunk Pallas TPU kernel.
+
+Per (batch, chunk, head) tile it computes, entirely in VMEM:
+  * within-chunk decay weights  L[q,k] = exp(cum_q - cum_k) (causal),
+  * the "attention" form  Y_intra = ((C B^T) ∘ L ∘ dt_k) @ X           (Q, P)
+  * the chunk state contribution  H_c = (B ∘ exp(cum_end - cum) ∘ dt)^T X (N, P)
+  * the incoming-state decay vector exp(cum)                              (Q,)
+
+The O(Q^2) score tile never touches HBM (the pure-XLA path materializes
+(B, nc, Q, Q, H) decay tensors — the dominant HBM term for SSM archs).  The
+inter-chunk recurrence (nc steps, O(B H P N) per step) stays a jnp scan in
+ops.ssd_forward — it is tiny and sequential.
+
+Layout: x (B, nc, H, Q, P); B/C (B, nc, Q, N); dt (B, nc, H, Q); A (H,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, y_ref, hc_ref, dec_ref):
+    x = x_ref[0, 0, 0].astype(jnp.float32)  # (Q, P)
+    Bm = b_ref[0, 0].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)  # (Q, N)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)  # (Q,)
+    a = a_ref[0]  # scalar decay rate (positive)
+
+    q = x.shape[0]
+    dA = dt * (-a)  # per-step log decay
+    cum = jnp.cumsum(dA)  # (Q,)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q, Q)
+    li = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    # mask the exponent (non-causal deltas are positive -> exp overflow)
+    decay = jnp.exp(jnp.where(li >= lj, cum[:, None] - cum[None, :], -jnp.inf))
+    w = scores * decay * dt[None, :]
+    y_ref[0, 0, 0] = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    end_decay = jnp.exp(cum[-1] - cum) * dt  # (Q,)
+    hc = jax.lax.dot_general(Bm * end_decay[:, None], x,
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (N, P)
+    hc_ref[0, 0, 0] = hc
+    dec_ref[0, 0, 0] = jnp.exp(cum)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(x, Bm, Cm, dt, A, *, interpret: bool | None = None):
+    """x: (B, nc, H, Q, P); Bm/Cm: (B, nc, Q, N); dt: (B, nc, H, Q); A: (H,).
+
+    Returns (y_intra (B,nc,H,Q,P) fp32, chunk_states (B,nc,H,N,P) fp32,
+             in_decay (B,nc,H,Q) fp32)."""
+    Bsz, nc, H, Q, P = x.shape
+    N = Bm.shape[-1]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    out = pl.pallas_call(
+        _ssd_kernel,
+        grid=(Bsz, nc, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, c, h: (b, c, h, 0)),
+            pl.BlockSpec((1,), lambda b, c, h: (h,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, N, P), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, c, h: (b, c, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, nc, H, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, nc, H, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, nc, H, Q), jnp.float32),
+        ],
+        scratch_shapes=[],
+        interpret=interpret,
+    )(x, Bm, Cm, dt, A)
+    return out

@@ -1,0 +1,91 @@
+"""Sharding assembly for the dry-run and launchers: parameter, optimizer-state,
+batch, and cache shardings derived from the logical rules in models/sharding.py.
+Everything operates on ShapeDtypeStructs (eval_shape) — no allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models.sharding import MeshRules, param_logical_tree, param_shardings
+
+
+def replicated(rules: MeshRules) -> NamedSharding:
+    return NamedSharding(rules.mesh, P())
+
+
+def batch_sharding(rules: MeshRules, ndim: int, global_batch: int) -> NamedSharding:
+    """Shard dim0 (batch) over the DP axes (prefix fallback when the batch
+    does not divide the full DP group, e.g. decode's 128 over 256 chips)."""
+    spec = rules.resolve(("batch",) + (None,) * (ndim - 1),
+                         (global_batch,) + (1,) * (ndim - 1))
+    return NamedSharding(rules.mesh, spec)
+
+
+def opt_state_shardings(opt_state_shapes, params_shapes, rules: MeshRules):
+    """AdamW m/v mirror the param shardings; Adafactor vr/vc drop the reduced
+    dim from the param spec; scalars replicate."""
+    pshard = param_shardings(params_shapes, rules)
+
+    def like_params(sub):
+        return jax.tree.map(lambda p, s: s, sub, pshard)
+
+    out = {}
+    for key, sub in opt_state_shapes.items():
+        if key in ("m", "v"):
+            out[key] = like_params(sub)
+        elif key == "f":
+            def factored(param_sh, fsub):
+                spec = list(param_sh.spec) if param_sh.spec else []
+                def pad(spec_, nd):
+                    spec_ = list(spec_)[-nd:] if nd else []
+                    return [None] * (nd - len(spec_)) + spec_
+                res = {}
+                for name, leaf in fsub.items():
+                    nd = len(leaf.shape)
+                    if name == "vr":  # param shape minus last dim
+                        res[name] = NamedSharding(rules.mesh, P(*pad(spec[:-1], nd)))
+                    elif name == "vc":  # minus second-to-last dim
+                        res[name] = NamedSharding(
+                            rules.mesh, P(*pad(spec[:-2] + spec[-1:], nd)))
+                    else:  # "v": same as param
+                        res[name] = NamedSharding(rules.mesh,
+                                                  P(*pad(spec, nd)))
+                return res
+
+            out[key] = jax.tree.map(
+                factored, pshard, sub,
+                is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x))
+        else:  # step counters etc.
+            out[key] = jax.tree.map(lambda _: replicated(rules), sub)
+    return out
+
+
+def cache_shardings(cache_shapes, rules: MeshRules, global_batch: int):
+    """Heuristic per-leaf cache sharding: the first dim equal to the global
+    batch -> DP axes (prefix fallback — an unsharded 32k KV cache is 100+ GB
+    per device on the 100-layer archs); the last trailing dim divisible by the
+    TP size (and not already consumed by the batch axes) -> TP."""
+
+    def leaf(s):
+        logical = [None] * len(s.shape)
+        for i, d in enumerate(s.shape):
+            if d == global_batch and global_batch > 1:
+                logical[i] = "batch"
+                break
+        for i in range(len(s.shape) - 1, -1, -1):
+            if logical[i] is None and s.shape[i] >= rules.axes_size(rules.tp):
+                logical[i] = "tp"
+                break
+        return NamedSharding(rules.mesh,
+                             rules.resolve(tuple(logical), tuple(s.shape)))
+
+    return jax.tree.map(leaf, cache_shapes)
+
+
+def to_structs(shapes, shardings):
+    """Attach shardings to a ShapeDtypeStruct tree."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)

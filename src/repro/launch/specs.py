@@ -1,0 +1,103 @@
+"""input_specs(): ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+device allocation) for every model input of every (arch x shape) cell, plus the
+step-function builders the dry-run lowers."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import transformer as T
+from ..models.sharding import MeshRules, param_shardings
+from ..optim import make_optimizer
+from ..serving.engine import decode_step, prefill
+from ..train.steps import make_train_step
+from . import shardings as SH
+
+
+def params_structs(cfg: ModelConfig, rules: MeshRules):
+    shapes = jax.eval_shape(partial(T.init_params, cfg=cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return SH.to_structs(shapes, param_shardings(shapes, rules))
+
+
+def _batch_structs(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules,
+                   seq_len: int | None = None):
+    B = shape.global_batch
+    S = seq_len if seq_len is not None else shape.seq_len
+    bs2 = SH.batch_sharding(rules, 2, B)
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=bs2),
+        "targets": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=bs2),
+    }
+    if cfg.memory_len:
+        out["memory"] = jax.ShapeDtypeStruct(
+            (B, cfg.memory_len, cfg.d_model), jnp.float32,
+            sharding=SH.batch_sharding(rules, 3, B))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules) -> dict:
+    """All arguments of the step function this cell lowers, as sharded
+    ShapeDtypeStructs.  Returns {"fn": step_fn, "args": tuple, "out_shardings"}.
+    """
+    params = params_structs(cfg, rules)
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer)
+        opt_shapes = jax.eval_shape(opt.init, params)
+        opt_structs = SH.to_structs(
+            opt_shapes, SH.opt_state_shardings(opt_shapes, params, rules))
+        batch = _batch_structs(cfg, shape, rules)
+        step = make_train_step(cfg, opt)
+        out_sh = (jax.tree.map(lambda s: s.sharding, params),
+                  jax.tree.map(lambda s: s.sharding, opt_structs),
+                  None)
+        return {"fn": step, "args": (params, opt_structs, batch),
+                "out_shardings": out_sh, "donate": (0, 1)}
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+
+        def prefill_step(params, batch):
+            return prefill(params, cfg, batch["tokens"], cache_len=S,
+                           memory=batch.get("memory"))
+
+        batch = _batch_structs(cfg, shape, rules)
+        batch.pop("targets")
+        cache_shapes = jax.eval_shape(
+            lambda: T.init_cache(cfg, B, S))
+        cache_sh = SH.cache_shardings(cache_shapes, rules, B)
+        extras = {}
+        if cfg.memory_len:
+            extras["enc_memory"] = SH.batch_sharding(rules, 3, B)
+        logits_sh = SH.batch_sharding(rules, 3, B)
+        out_sh = (logits_sh, {"stack": cache_sh, **extras})
+        return {"fn": prefill_step, "args": (params, batch),
+                "out_shardings": out_sh, "donate": ()}
+
+    # decode: one new token against a cache of seq_len
+    B, S = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    cache_sh = SH.cache_shardings(cache_shapes, rules, B)
+    cache = {"stack": SH.to_structs(cache_shapes, cache_sh)}
+    out_cache_sh = {"stack": cache_sh}
+    if cfg.memory_len:
+        mem_sh = SH.batch_sharding(rules, 3, B)
+        cache["enc_memory"] = jax.ShapeDtypeStruct(
+            (B, cfg.memory_len, cfg.d_model), jnp.dtype(cfg.compute_dtype),
+            sharding=mem_sh)
+        out_cache_sh["enc_memory"] = mem_sh
+    bs2 = SH.batch_sharding(rules, 2, B)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=bs2)
+    positions = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=bs2)
+
+    def serve_step(params, cache, tokens, positions):
+        logits, new_cache = decode_step(params, cfg, cache, tokens, positions)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    out_sh = (SH.batch_sharding(rules, 1, B), out_cache_sh)
+    return {"fn": serve_step, "args": (params, cache, tokens, positions),
+            "out_shardings": out_sh, "donate": (1,)}

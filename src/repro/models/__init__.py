@@ -1,0 +1,6 @@
+from . import layers, sharding, transformer
+from .layers import Ctx
+from .transformer import forward, init_cache, init_params, logits_last
+
+__all__ = ["layers", "transformer", "sharding", "Ctx", "forward",
+           "init_params", "init_cache", "logits_last"]

@@ -1,0 +1,185 @@
+"""shard_map microbatch pipeline runtime executing a PipelinePlan.
+
+The paper's service chain made SPMD: mesh ('stage', 'data'); stage k holds its
+planner-assigned contiguous group range; smashed data (the residual stream)
+moves stage k -> k+1 via `jax.lax.ppermute` — the TPU fabric plays the paper's
+physical network, the ppermute schedule is the chaining.  GPipe-style schedule
+with M microbatches: T = M + K - 1 ticks, fill/drain bubbles; XLA's async
+collective-permute (start/done pairs) overlaps the tick-t transfer with tick-t
+compute — compute/comm overlap the paper does not model (a beyond-paper
+optimization, EXPERIMENTS.md §Perf).
+
+Backward: plain jax.grad through the shard_map — AD reverses every ppermute,
+yielding the paper's reverse-path gradient chaining for free.  Embedding and
+the LM head run outside the pipeline region, sharded over 'data' (DESIGN.md).
+
+Stages run one structurally identical program: every stage scans over
+`Gmax = ceil(n_groups / K)` group slots; slots beyond the stage's planner
+segment carry a False validity flag and pass the residual through unchanged.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models import layers as L
+from ..models import transformer as T
+from ..models.layers import Ctx
+from ..train.steps import chunked_xent
+from .planner import PipelinePlan
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+
+def make_pipeline_mesh(n_stages: int, n_data: int) -> Mesh:
+    return jax.make_mesh((n_stages, n_data), ("stage", "data"))
+
+
+# ------------------------------------------------------------ param restacking
+def stack_for_pipeline(params: dict, cfg: ModelConfig, plan: PipelinePlan):
+    """Model 'stack' params (R, ...) per pattern position -> (K, Gmax, ...)
+    stage-major layout + validity mask (K, Gmax).  Differentiable (gather)."""
+    K = plan.K
+    Gmax = max(plan.groups_per_stage)
+    R = plan.n_groups
+    # index map: slot (k, g) -> source group index (clamped; invalid masked)
+    idx = []
+    for k, (lo, hi) in enumerate(plan.segments):
+        row = [min(lo - 1 + g, R - 1) for g in range(Gmax)]
+        idx.append(row)
+    idx = jnp.asarray(idx, jnp.int32)  # (K, Gmax)
+
+    def restack(leaf):
+        return jnp.take(leaf, idx.reshape(-1), axis=0).reshape(
+            (K, Gmax) + leaf.shape[1:])
+
+    groups = tuple(jax.tree.map(restack, g) for g in params["stack"]["groups"])
+    valid = jnp.asarray(
+        [[g < n for g in range(Gmax)] for n in plan.groups_per_stage], bool)
+    return groups, valid
+
+
+# ------------------------------------------------------------ pipelined forward
+def _stage_apply(stage_groups, valid, cfg: ModelConfig, x, ctx: Ctx):
+    """Scan this stage's Gmax group slots over the residual stream."""
+
+    def body(carry, xs):
+        h, aux_acc = carry
+        params_g, valid_g = xs
+        h2 = h
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(cfg.pattern):
+            h2, _, a = T.apply_block(params_g[i], cfg, kind, h2, ctx, None)
+            aux = aux + a
+        h = jnp.where(valid_g, h2, h)
+        aux_acc = aux_acc + jnp.where(valid_g, aux, 0.0)
+        return (h, aux_acc), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    (h, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (stage_groups, valid))
+    return h, aux
+
+
+def pipelined_apply(groups_stacked, valid, h_mb, *, cfg: ModelConfig, K: int,
+                    n_micro: int):
+    """Runs INSIDE shard_map over ('stage', 'data').
+
+    groups_stacked: per-pattern-position trees, leading (1, Gmax, ...) local
+    (stage-sharded); h_mb: (M, mb_local, S, D) microbatched embeddings
+    (replicated over 'stage').  Returns ((M, mb, S, D) outputs — valid on the
+    LAST stage's shard — and the stage-local aux-loss sum)."""
+    stage = jax.lax.axis_index("stage")
+    M = n_micro
+    n_ticks = M + K - 1
+    mb, S = h_mb.shape[1], h_mb.shape[2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (mb, S))
+    ctx = Ctx(mode="train", positions=positions)
+    my_groups = tuple(jax.tree.map(lambda p: p[0], g) for g in groups_stacked)
+    my_valid = valid[0]
+
+    def tick(carry, t):
+        received, outs, aux_acc = carry
+        inject = h_mb[jnp.clip(t, 0, M - 1)]
+        x_in = jnp.where(stage == 0, inject, received)
+        # bubble skipping: stage i only has real work for ticks i <= t < i+M;
+        # lax.cond (real XLA conditional — not vmapped into a select here)
+        # skips the fill/drain garbage compute entirely
+        active = (t >= stage) & (t - stage < M)
+        y, aux = jax.lax.cond(
+            active,
+            lambda xi: _stage_apply(my_groups, my_valid, cfg, xi, ctx),
+            lambda xi: (xi, jnp.zeros((), jnp.float32)),
+            x_in)
+        # the last stage collects microbatch t - (K - 1)
+        oidx = jnp.clip(t - (K - 1), 0, M - 1)
+        take = t >= K - 1
+        outs = jax.lax.dynamic_update_index_in_dim(
+            outs, jnp.where(take, y, outs[oidx]), oidx, 0)
+        # ship smashed data along the chain (ring permute; the wrap-around
+        # edge K-1 -> 0 is ignored by stage 0's inject select)
+        nxt = jax.lax.ppermute(y, "stage",
+                               [(i, (i + 1) % K) for i in range(K)])
+        return (nxt, outs, aux_acc + aux), None
+
+    (_, outs, aux), _ = jax.lax.scan(
+        tick, (jnp.zeros_like(h_mb[0]), jnp.zeros_like(h_mb),
+               jnp.zeros((), jnp.float32)),
+        jnp.arange(n_ticks))
+    return outs, aux[None]
+
+
+def pipeline_forward(params, batch, cfg: ModelConfig, mesh: Mesh,
+                     plan: PipelinePlan, n_micro: int):
+    """Embed -> pipelined blocks -> final hidden states (B, S, D) + aux."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    assert B % n_micro == 0
+    mb = B // n_micro
+    x = T.embed_tokens(params, cfg, tokens)
+    h_mb = x.reshape(n_micro, mb, S, -1)
+    groups_stacked, valid = stack_for_pipeline(params, cfg, plan)
+    fn = shard_map(
+        partial(pipelined_apply, cfg=cfg, K=plan.K, n_micro=n_micro),
+        mesh=mesh,
+        in_specs=(tuple(jax.tree.map(lambda _: P("stage"), g)
+                        for g in groups_stacked), P("stage"),
+                  P(None, "data")),
+        out_specs=(P("stage", "data"), P("stage")),
+        check_vma=False,
+    )
+    outs, aux = fn(groups_stacked, valid, h_mb)
+    # out dim0 is stage-major (K * M); the last stage's block holds the model
+    # output microbatches
+    h_last = outs[-n_micro:]
+    hidden = h_last.reshape(B, S, -1)
+    hidden = L.rmsnorm(hidden, params["final_norm"], cfg.norm_eps)
+    # aux averaged over ticks (bubble ticks process pass-through garbage; the
+    # valid-slot masking keeps their contribution bounded)
+    return hidden, jnp.sum(aux) / (n_micro + plan.K - 1)
+
+
+def make_pipeline_train_step(cfg: ModelConfig, mesh: Mesh, plan: PipelinePlan,
+                             n_micro: int, opt):
+    def loss_fn(params, batch):
+        hidden, aux = pipeline_forward(params, batch, cfg, mesh, plan, n_micro)
+        head_w = T.head_matrix(params, cfg).astype(hidden.dtype)
+        nll = chunked_xent(hidden, head_w, batch["targets"], cfg)
+        return nll + 0.01 * aux, nll
+
+    def train_step(params, opt_state, batch):
+        (loss, nll), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "nll": nll}
+
+    return train_step

@@ -1,0 +1,112 @@
+"""Host-level MSL/MSI executor over a planner Plan: runs REAL sub-model JAX
+computations per chain stage and charges the plan's network delays — the
+end-to-end validation that the planner's latency decomposition (Eq. 16)
+corresponds to an actual executable chain.
+
+Each stage's sub-model is the contiguous group range the plan assigns; smashed
+data is the actual residual-stream array handed from stage to stage (the
+paper's Fig. 1 forward walk).  Measured compute times per node feed the
+StepTimeCalibrator (ft/manager.py), closing the paper's OLS calibration loop.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core import FW, BW, PlanEvaluator, ServiceChainRequest
+from ..core.plan import Plan
+from ..models import transformer as T
+from ..models.layers import Ctx
+
+
+@dataclass
+class StageTrace:
+    stage: int
+    node: str
+    groups: tuple[int, int]
+    compute_s_measured: float
+    compute_s_predicted: float
+    transfer_s_charged: float
+    smashed_bytes: float
+
+
+@dataclass
+class ChainResult:
+    hidden: jnp.ndarray
+    traces: list[StageTrace] = field(default_factory=list)
+
+    @property
+    def total_charged_s(self) -> float:
+        return sum(t.compute_s_predicted + t.transfer_s_charged
+                   for t in self.traces)
+
+    @property
+    def total_measured_compute_s(self) -> float:
+        return sum(t.compute_s_measured for t in self.traces)
+
+
+class ChainSimulator:
+    """Executes a splitting/placement plan stage by stage on the local device,
+    charging per-hop network delays from the plan's evaluator."""
+
+    def __init__(self, cfg: ModelConfig, params, net, profile,
+                 request: ServiceChainRequest):
+        self.cfg = cfg
+        self.params = params
+        self.ev = PlanEvaluator(net, profile, request)
+        self.request = request
+        self._stage_fns: dict[tuple[int, int], object] = {}
+
+    def _stage_fn(self, lo: int, hi: int):
+        """jit'd executor for group range [lo, hi] (1-indexed inclusive)."""
+        key = (lo, hi)
+        if key not in self._stage_fns:
+            cfg = self.cfg
+            plen = len(cfg.pattern)
+
+            def run(stack_params, x):
+                B, S = x.shape[0], x.shape[1]
+                pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+                ctx = Ctx(mode="prefill", positions=pos)
+                h = x
+                for g in range(lo - 1, hi):
+                    for i, kind in enumerate(cfg.pattern):
+                        p_g = jax.tree.map(lambda l: l[g],
+                                           stack_params["groups"][i])
+                        h, _, _ = T.apply_block(p_g, cfg, kind, h, ctx, None)
+                return h
+
+            self._stage_fns[key] = jax.jit(run)
+        return self._stage_fns[key]
+
+    def forward(self, tokens) -> ChainResult:
+        """Walk the chain: embed at the source, per-stage blocks at each hop."""
+        plan: Plan = self.plan
+        x = T.embed_tokens(self.params, self.cfg, tokens)
+        result = ChainResult(hidden=x)
+        for k, ((lo, hi), node) in enumerate(zip(plan.segments, plan.placement)):
+            fn = self._stage_fn(lo, hi)
+            t0 = time.perf_counter()
+            x = jax.block_until_ready(fn(self.params["stack"], x))
+            measured = time.perf_counter() - t0
+            predicted = self.ev.segment_comp_s(node, lo, hi)
+            trans = prop = 0.0
+            smashed = 0.0
+            if k < plan.K - 1:
+                trans, prop = self.ev.cut_transfer_s(plan.paths[k],
+                                                     plan.segments[k][1])
+                smashed = float(x.size * x.dtype.itemsize)
+            result.traces.append(StageTrace(
+                stage=k, node=node, groups=(lo, hi),
+                compute_s_measured=measured, compute_s_predicted=predicted,
+                transfer_s_charged=trans + prop, smashed_bytes=smashed))
+        result.hidden = x
+        return result
+
+    def run_plan(self, plan: Plan, tokens) -> ChainResult:
+        self.plan = plan
+        return self.forward(tokens)

@@ -1,0 +1,71 @@
+"""Gradient compression for data-parallel synchronization.
+
+Distributed-optimization utilities for the large-scale runtime:
+  * int8 blockwise quantization with error feedback (EF-SGD style) — ~4x
+    reduction of DP all-reduce bytes at negligible quality cost;
+  * top-k sparsification with error feedback.
+
+These are used by the explicit shard_map DP-sync path (`repro.msl.pipeline`)
+where we control the collective; under plain GSPMD the backward all-reduce is
+implicit and uncompressed (recorded as such in the roofline's collective term).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048
+
+
+def _pad_to_block(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    return jnp.pad(flat, (0, pad)), pad
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise symmetric int8 quantization.  Returns (q, scales)."""
+    flat, _ = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_with_feedback(grad, error):
+    """int8 compress `grad + error`; returns (q, scale, new_error)."""
+    g = grad.astype(jnp.float32) + error
+    q, scale = quantize_int8(g)
+    deq = dequantize_int8(q, scale, grad.shape, jnp.float32)
+    return q, scale, g - deq
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def topk_sparsify(x: jnp.ndarray, frac: float = 0.01):
+    """Keep the largest-|.| `frac` of entries; returns (values, indices)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_densify(values, idx, shape, dtype):
+    n = 1
+    for d in shape:
+        n *= d
+    out = jnp.zeros((n,), jnp.float32).at[idx].set(values)
+    return out.reshape(shape).astype(dtype)

@@ -1,0 +1,134 @@
+"""Optimizers (pure JAX, pytree-based): AdamW and Adafactor.
+
+AdamW keeps fp32 m/v (+ params may themselves be the fp32 masters).  Adafactor
+keeps factored second moments (rows/cols) for >=2-D leaves — the only way 480B
+params fit 16 GB/chip HBM alongside bf16 weights (see configs/arctic_480b.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], tuple[Any, Any]]
+    name: str
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(1.0, warmup)
+        frac = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _lr_scale=None):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat, tree = jax.tree_util.tree_flatten(params)
+        gflat = tree.flatten_up_to(grads)
+        mflat = tree.flatten_up_to(state["m"])
+        vflat = tree.flatten_up_to(state["v"])
+        outs = [upd(g, m, v, p) for g, m, v, p in zip(gflat, mflat, vflat, flat)]
+        new_params = tree.unflatten([o[0] for o in outs])
+        new_m = tree.unflatten([o[1] for o in outs])
+        new_v = tree.unflatten([o[2] for o in outs])
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(lr_fn, decay=0.99, eps=1e-30, clip_threshold=1.0) -> Optimizer:
+    """Factored second moments: for an (..., R, C) leaf keep row/col means."""
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(st, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _lr_scale=None):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = decay * s["vr"] + (1 - decay) * g2.mean(axis=-1)
+                vc = decay * s["vc"] + (1 - decay) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1)[..., None, None], eps))
+                upd_ = g * jax.lax.rsqrt(denom + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = decay * s["v"] + (1 - decay) * g2
+                upd_ = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (Shazeer & Stern): RMS(update) <= clip_threshold
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + 1e-12)
+            upd_ = upd_ / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * upd_).astype(p.dtype), new_s
+
+        flat, tree = jax.tree_util.tree_flatten(params)
+        gflat = tree.flatten_up_to(grads)
+        sflat = tree.flatten_up_to(state["f"])
+        outs = [upd(g, s, p) for g, s, p in zip(gflat, sflat, flat)]
+        new_params = tree.unflatten([o[0] for o in outs])
+        new_f = tree.unflatten([o[1] for o in outs])
+        return new_params, {"f": new_f, "step": step}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def make_optimizer(name: str, lr: float = 3e-4, warmup: int = 100,
+                   total: int = 10_000) -> Optimizer:
+    sched = cosine_schedule(lr, warmup, total)
+    if name == "adamw":
+        return adamw(sched)
+    if name == "adafactor":
+        return adafactor(sched)
+    raise ValueError(name)

@@ -1,0 +1,3 @@
+from .analysis import Roofline, collective_stats
+
+__all__ = ["Roofline", "collective_stats"]

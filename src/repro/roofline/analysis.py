@@ -1,0 +1,140 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+  compute term    = HLO_FLOPs_global  / (chips * 197 TFLOP/s bf16)
+  memory term     = HLO_bytes_global  / (chips * 819 GB/s HBM)
+  collective term = collective_bytes_global / (chips * 50 GB/s ICI)
+
+`cost_analysis()` of the SPMD-partitioned module is *per device*; global =
+per-device x chips, so the terms above equal per-device work over per-chip
+rates.  Collective bytes are parsed from the optimized HLO: per-op effective
+per-device traffic (ring all-reduce 2(n-1)/n x shard bytes, all-gather (n-1)/n x
+full bytes, reduce-scatter (n-1)/n x full bytes, all-to-all (n-1)/n, permute 1x).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:%|ROOT\s+%?)?[\w.\-]+\s*=\s*(\(?[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> dict:
+    """Per-device effective bytes per collective type + op counts."""
+    bytes_by = {k: 0.0 for k in
+                ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                 "collective-permute")}
+    count_by = {k: 0 for k in bytes_by}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        out_type, op = m.group(1), m.group(2)
+        out_bytes = _shape_bytes(out_type)
+        n = max(2, _group_size(line, n_devices))
+        ring = (n - 1) / n
+        if op == "all-reduce":
+            vol = 2.0 * ring * out_bytes  # reduce-scatter + all-gather phases
+        elif op == "all-gather":
+            vol = ring * out_bytes  # output is the gathered (full) buffer
+        elif op == "reduce-scatter":
+            vol = ring * out_bytes * n  # output is the shard
+        elif op == "all-to-all":
+            vol = ring * out_bytes
+        else:  # collective-permute
+            vol = out_bytes
+        bytes_by[op] += vol
+        count_by[op] += 1
+    return {"bytes_per_device": bytes_by, "counts": count_by,
+            "total_bytes_per_device": sum(bytes_by.values())}
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops_global: float
+    peak_flops: float = 197e12
+    hbm_bw: float = 819e9
+    ici_bw: float = 50e9
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/masking/dispatch waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chips' peak that useful model FLOPs would achieve if
+        the step ran at the bound implied by the dominant term."""
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_bound <= 0:
+            return 0.0
+        achieved = self.model_flops_global / t_bound
+        return achieved / (self.chips * self.peak_flops)
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d

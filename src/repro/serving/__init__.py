@@ -1,0 +1,3 @@
+from .engine import ServingEngine, decode_step, make_serve_step, prefill
+
+__all__ = ["prefill", "decode_step", "make_serve_step", "ServingEngine"]

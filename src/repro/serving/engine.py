@@ -1,0 +1,102 @@
+"""Serving: prefill + decode steps with per-family caches.
+
+`serve_step` = one new token against a cache of `cache_len` (the shape suite's
+decode_32k / long_500k cells lower exactly this).  Batched requests: the engine
+packs requests into the fixed batch; continuous batching slots free as requests
+hit EOS (host-side loop in `ServingEngine`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import transformer as T
+from ..models.layers import Ctx
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int, memory=None):
+    """tokens (B, S) -> (next-token logits (B, 1, V), cache)."""
+    B, S = tokens.shape
+    cache = T.init_cache(cfg, B, cache_len)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    ctx = Ctx(mode="prefill", positions=pos)
+    enc = T.encode_memory(params, cfg, memory) if memory is not None else None
+    if enc is not None:
+        ctx = Ctx(mode="prefill", positions=pos, memory=enc)
+    hidden, cache, _ = T.forward(params, cfg, tokens, ctx, cache=cache)
+    logits = T.logits_last(params, cfg, hidden)
+    extras = {"enc_memory": enc} if enc is not None else {}
+    return logits, {"stack": cache, **extras}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, positions):
+    """One token per sequence: tokens (B, 1), positions (B, 1) absolute."""
+    ctx = Ctx(mode="decode", positions=positions,
+              memory=cache.get("enc_memory"))
+    hidden, stack_cache, _ = T.forward(params, cfg, tokens, ctx,
+                                       cache=cache["stack"])
+    logits = T.logits_last(params, cfg, hidden)
+    new_cache = dict(cache, stack=stack_cache)
+    return logits, new_cache
+
+
+def make_serve_step(cfg: ModelConfig):
+    """The dry-run's serve_step: greedy-decode one token."""
+
+    def serve_step(params, cache, tokens, positions):
+        logits, cache = decode_step(params, cfg, cache, tokens, positions)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    generated: list = None
+
+
+class ServingEngine:
+    """Host-side batched serving loop (example application scale)."""
+
+    def __init__(self, cfg: ModelConfig, params, batch_size: int, cache_len: int,
+                 eos_id: int = 0):
+        self.cfg, self.params = cfg, params
+        self.B, self.cache_len, self.eos = batch_size, cache_len, eos_id
+        self._prefill = jax.jit(partial(prefill, cfg=cfg, cache_len=cache_len),
+                                static_argnames=())
+        self._step = jax.jit(make_serve_step(cfg))
+
+    def generate(self, prompts: list[np.ndarray], max_new: int) -> list[list[int]]:
+        outs: list[list[int]] = []
+        for start in range(0, len(prompts), self.B):
+            group = prompts[start : start + self.B]
+            pad_to = max(len(p) for p in group)
+            toks = np.zeros((self.B, pad_to), np.int32)
+            for i, p in enumerate(group):
+                toks[i, pad_to - len(p):] = p  # left-pad
+            logits, cache = self._prefill(self.params, tokens=jnp.asarray(toks))
+            cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            pos = jnp.full((self.B, 1), pad_to, jnp.int32)
+            gen = [[] for _ in group]
+            done = np.zeros(self.B, bool)
+            for _ in range(max_new):
+                for i in range(len(group)):
+                    if not done[i]:
+                        gen[i].append(int(cur[i]))
+                        done[i] = int(cur[i]) == self.eos
+                if done[: len(group)].all():
+                    break
+                cur, cache = self._step(self.params, cache, cur[:, None], pos)
+                pos = pos + 1
+            outs.extend(gen)
+        return outs

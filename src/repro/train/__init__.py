@@ -1,0 +1,3 @@
+from .steps import chunked_xent, loss_fn, make_eval_step, make_train_step
+
+__all__ = ["make_train_step", "make_eval_step", "loss_fn", "chunked_xent"]

@@ -1,0 +1,117 @@
+"""Checkpoint roundtrip, gradient compression, elastic re-planning."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.core import IF, TR, ServiceChainRequest, nsfnet, resnet101_profile
+from repro.ft import ElasticPlanController
+from repro.optim import (
+    compress_with_feedback,
+    dequantize_int8,
+    init_error_feedback,
+    quantize_int8,
+    topk_densify,
+    topk_sparsify,
+)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "params": {"stack": {"groups": [{"w": np.arange(12.0).reshape(3, 4)},
+                                        {"b": np.ones((5,), np.float32)}]},
+                   "embed": np.full((2, 2), 7, np.int32)},
+        "opt": {"m": [np.zeros(3), np.ones(2)], "step": np.int64(5)},
+    }
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(3, tree)
+    mgr.save(7, tree, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 7
+    step, restored = mgr.restore()
+    assert step == 7
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(tree)[0],
+            jax.tree_util.tree_flatten_with_path(restored)[0]):
+        assert jax.tree_util.keystr(pa) == jax.tree_util.keystr(pb)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": np.ones(3) * s})
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+    _, r = mgr.restore(3)
+    assert r["x"][0] == 3
+
+
+def test_int8_compression_error_feedback():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((1000,)) * 0.01, jnp.float32)
+    q, scale = quantize_int8(g)
+    deq = dequantize_int8(q, scale, g.shape, jnp.float32)
+    rel = float(jnp.linalg.norm(deq - g) / jnp.linalg.norm(g))
+    assert rel < 0.01  # blockwise int8 is ~0.4% noise on gaussians
+    # error feedback makes the *accumulated* compressed stream unbiased:
+    err = jnp.zeros_like(g)
+    acc_true, acc_sent = jnp.zeros_like(g), jnp.zeros_like(g)
+    for i in range(20):
+        gi = jnp.asarray(rng.standard_normal(g.shape) * 0.01, jnp.float32)
+        q, s, err = compress_with_feedback(gi, err)
+        acc_true += gi
+        acc_sent += dequantize_int8(q, s, g.shape, jnp.float32)
+    drift = float(jnp.linalg.norm(acc_true - acc_sent - err))
+    assert drift < 1e-3  # residual lives entirely in the feedback buffer
+
+
+def test_topk_sparsify_roundtrip():
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((64, 32)),
+                    jnp.float32)
+    vals, idx = topk_sparsify(x, frac=0.1)
+    dense = topk_densify(vals, idx, x.shape, jnp.float32)
+    kept = int((dense != 0).sum())
+    assert kept == int(64 * 32 * 0.1)
+    # kept entries are exact and are the largest-magnitude ones
+    mask = np.asarray(dense) != 0
+    np.testing.assert_allclose(np.asarray(dense)[mask], np.asarray(x)[mask])
+    assert np.abs(np.asarray(x)[mask]).min() >= np.abs(
+        np.asarray(x)[~mask]).max() - 1e-6
+
+
+def test_elastic_replan_on_failure():
+    net = nsfnet(source="v4")
+    prof = resnet101_profile()
+    req = ServiceChainRequest("resnet101", "v4", "v13", 8, TR)
+    cands = [["v4"], ["v7", "v11"], ["v13"]]
+    ctl = ElasticPlanController(net, prof, req, 3, cands)
+    first = ctl.plan.placement[1]
+    assert first in ("v7", "v11")
+    new_plan = ctl.fail_node(first, step=10)
+    assert first not in new_plan.placement
+    kinds = [e.kind for e in ctl.events]
+    assert "failure" in kinds and "replan" in kinds
+
+
+def test_straggler_refit_and_replan():
+    net = nsfnet(source="v4")
+    prof = resnet101_profile()
+    req = ServiceChainRequest("resnet101", "v4", "v13", 8, TR)
+    cands = [["v4"], ["v7", "v11"], ["v13"]]
+    ctl = ElasticPlanController(net, prof, req, 3, cands)
+    node = ctl.plan.placement[1]
+    flops = 1e12
+    pred = net.nodes[node].compute.comp_time_s(8, flops)
+    # report the node as 10x slower, twice (OLS needs 2 points)
+    ctl.observe_step(1, node, 8, flops, 10 * pred)
+    ctl.observe_step(2, node, 16, flops,
+                     10 * net.nodes[node].compute.comp_time_s(16, flops))
+    kinds = [e.kind for e in ctl.events]
+    assert "straggler" in kinds
+    # the fitted model now predicts ~10x the old latency
+    newpred = ctl.net.nodes[node].compute.comp_time_s(8, flops)
+    assert newpred == pytest.approx(10 * pred, rel=0.2)

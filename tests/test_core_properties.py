@@ -1,0 +1,126 @@
+"""Property-based tests (hypothesis) for the planner's invariants."""
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import (
+    IF,
+    TR,
+    LayerProfile,
+    ModelProfile,
+    PlanEvaluator,
+    ServiceChainRequest,
+    bcd_solve,
+    even_split,
+    exact_solve,
+    nsfnet,
+    validate_segments,
+)
+from repro.core.baselines import _dp_split
+from repro.core.resnet101_profile import resnet101_profile
+
+_settings = settings(max_examples=40, deadline=None,
+                     suppress_health_check=[HealthCheck.too_slow])
+
+
+@given(L=st.integers(2, 60), K=st.integers(1, 12))
+@_settings
+def test_even_split_is_valid_partition(L, K):
+    if K > L:
+        return
+    segs = even_split(L, K)
+    validate_segments(segs, L)
+    sizes = [hi - lo + 1 for lo, hi in segs]
+    assert max(sizes) - min(sizes) <= 1  # "evenly dividing" (Alg. 1 line 2)
+    assert sum(sizes) == L
+
+
+@given(
+    L=st.integers(3, 12),
+    K=st.integers(2, 5),
+    costs=st.lists(st.floats(0.01, 100.0), min_size=200, max_size=200),
+)
+@_settings
+def test_dp_split_optimal_vs_bruteforce(L, K, costs):
+    """The generic K-segmentation DP (shared by Alg. 2 / COMP-MS / COMM-MS) is
+    optimal for arbitrary non-negative additive segment costs."""
+    import itertools
+
+    if K > L:
+        return
+
+    def segcost(k, lo, hi):
+        # deterministic pseudo-random positive cost from the drawn pool
+        idx = (k * 131 + lo * 17 + hi * 7) % len(costs)
+        return costs[idx]
+
+    segs = _dp_split(L, K, segcost)
+    assert segs is not None
+    validate_segments(segs, L)
+    got = sum(segcost(k, lo, hi) for k, (lo, hi) in enumerate(segs))
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, L), K - 1):
+        lo, tot = 1, 0.0
+        for k, c in enumerate(list(cuts) + [L]):
+            tot += segcost(k, lo, c)
+            lo = c + 1
+        best = min(best, tot)
+    assert got <= best + 1e-9
+
+
+@given(b=st.sampled_from([1, 2, 8, 32, 128]), K=st.integers(2, 6),
+       mode=st.sampled_from([IF, TR]), seed=st.integers(0, 5))
+@_settings
+def test_solutions_satisfy_all_constraints(b, K, mode, seed):
+    import random
+
+    net = nsfnet(source="v4")
+    prof = resnet101_profile()
+    rng = random.Random(seed)
+    mids = [f"v{i}" for i in range(1, 15) if f"v{i}" not in ("v4", "v13")]
+    cands = [["v4"]] + [rng.sample(mids, 2) for _ in range(K - 2)] + [["v13"]]
+    req = ServiceChainRequest("resnet101", "v4", "v13", b, mode)
+    for solver in (exact_solve, bcd_solve):
+        res = solver(net, prof, req, K, cands)
+        if not res.feasible:
+            continue
+        ev = PlanEvaluator(net, prof, req)
+        ev.check(res.plan)  # raises on any violated constraint
+        # every inter-stage path is loop-free (paper Sec. III-D)
+        for p in res.plan.paths + ([res.plan.tail_path] if res.plan.tail_path else []):
+            assert len(p) == len(set(p))
+        # breakdown is consistent
+        lb = ev.evaluate(res.plan)
+        assert lb.total_s == res.latency_s
+
+
+@given(scale=st.floats(0.5, 4.0), b=st.sampled_from([1, 16, 256]))
+@_settings
+def test_latency_monotone_in_bandwidth(scale, b):
+    """Scaling all link bandwidths up can never increase optimal latency."""
+    from repro.core.topology import GBPS
+
+    prof = resnet101_profile()
+    cands = [["v4"], ["v7", "v11"], ["v13"]]
+    req = ServiceChainRequest("resnet101", "v4", "v13", b, IF)
+    base = exact_solve(nsfnet(source="v4"), prof, req, 3, cands)
+    fast = exact_solve(nsfnet(source="v4", bandwidth_bps=GBPS * scale), prof, req, 3,
+                       cands)
+    if scale >= 1.0:
+        assert fast.latency_s <= base.latency_s + 1e-12
+    else:
+        assert fast.latency_s >= base.latency_s - 1e-12
+
+
+@given(profile_scale=st.floats(1.0, 8.0))
+@_settings
+def test_latency_monotone_in_batch(profile_scale):
+    prof = resnet101_profile()
+    cands = [["v4"], ["v7", "v11"], ["v13"]]
+    net = nsfnet(source="v4")
+    prev = 0.0
+    for b in (1, 4, 16, 64):
+        req = ServiceChainRequest("resnet101", "v4", "v13", b, TR)
+        res = exact_solve(net, prof, req, 3, cands)
+        assert res.feasible
+        assert res.latency_s >= prev - 1e-12
+        prev = res.latency_s

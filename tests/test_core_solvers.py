@@ -1,0 +1,220 @@
+"""Solver correctness: ILP == exact DP == brute force; BCD quality; DFTS optimality."""
+import itertools
+import random
+
+import pytest
+
+from repro.core import (
+    IF,
+    TR,
+    ComputeModel,
+    LayerProfile,
+    LinkSpec,
+    ModelProfile,
+    NodeSpec,
+    PhysicalNetwork,
+    Plan,
+    PlanEvaluator,
+    ServiceChainRequest,
+    bcd_solve,
+    comm_ms_solve,
+    comp_ms_solve,
+    dfts,
+    exact_solve,
+    ilp_solve,
+    nsfnet,
+    resnet101_profile,
+)
+
+GB = 1024**3
+
+
+def _random_instance(seed: int, n_nodes: int = 6, L: int = 6, K: int = 3):
+    rng = random.Random(seed)
+    net = PhysicalNetwork()
+    names = [f"n{i}" for i in range(n_nodes)]
+    for i, name in enumerate(names):
+        cm = ComputeModel(name=f"dev{i}",
+                          pieces=((float("inf"), rng.uniform(1e-12, 2e-10), 1e-12),),
+                          alpha_tau=rng.choice([0.0, 2e-13]), beta_tau=0.0)
+        cap = rng.uniform(0.4, 4.0) * GB
+        net.add_node(NodeSpec(name, cm, cap, cap))
+    # ring + random chords
+    edges = {(i, (i + 1) % n_nodes) for i in range(n_nodes)}
+    for i in range(n_nodes):
+        for j in range(i + 1, n_nodes):
+            if rng.random() < 0.4:
+                edges.add((i, j))
+    for i, j in edges:
+        d = rng.uniform(1e-3, 15e-3)
+        bw = rng.choice([0.5e9, 1e9, 2e9])
+        net.add_bidirectional(names[i], names[j], LinkSpec(bw, bw, d, d))
+    layers = []
+    for l in range(L):
+        fw = rng.uniform(0.1, 8.0) * 1e9
+        act = rng.uniform(0.01, 3.0) * 1e6
+        mem = rng.uniform(1, 300) * 1e6
+        layers.append(LayerProfile(f"l{l}", fw, 2 * fw, act, act, mem, mem))
+    prof = ModelProfile("rand", layers)
+    s, d = names[0], names[-1]
+    mids = names[1:-1]
+    cands = [[s]] + [rng.sample(mids, k=min(2, len(mids))) for _ in range(K - 2)] + [[d]]
+    mode = rng.choice([IF, TR])
+    b = rng.choice([1, 4, 32, 128])
+    req = ServiceChainRequest("rand", s, d, b, mode)
+    return net, prof, req, K, cands
+
+
+def _brute_force(net, prof, req, K, cands):
+    """Enumerate every (segmentation, placement); optimal shortest path per cut."""
+    ev = PlanEvaluator(net, prof, req)
+    L = prof.L
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, L), K - 1):
+        segs, lo = [], 1
+        for c in list(cuts) + [L]:
+            segs.append((lo, c))
+            lo = c + 1
+        for placement in itertools.product(*cands):
+            total = 0.0
+            ok = True
+            for (lo_, hi_), node in zip(segs, placement):
+                if not ev.segment_fits(node, lo_, hi_):
+                    ok = False
+                    break
+                total += ev.segment_comp_s(node, lo_, hi_)
+            if not ok:
+                continue
+            try:
+                b = req.batch_size
+                for k in range(K - 1):
+                    cut = segs[k][1]
+                    fw = b * prof.cut_bytes(cut, "FW")
+                    bw = b * prof.cut_bytes(cut, "BW") if req.mode == TR else None
+                    c, _ = net.shortest_path(placement[k], placement[k + 1], fw, bw)
+                    total += c
+                tail_bw = 0.0 if req.mode == TR else None
+                c, _ = net.shortest_path(placement[-1], req.destination, 0.0, tail_bw)
+                total += c
+            except ValueError:
+                continue
+            best = min(best, total)
+    return best
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_exact_equals_bruteforce(seed):
+    net, prof, req, K, cands = _random_instance(seed)
+    res = exact_solve(net, prof, req, K, cands)
+    bf = _brute_force(net, prof, req, K, cands)
+    if bf == float("inf"):
+        assert not res.feasible
+    else:
+        assert res.feasible
+        assert res.latency_s == pytest.approx(bf, rel=1e-9)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_ilp_equals_exact(seed):
+    net, prof, req, K, cands = _random_instance(seed)
+    res_dp = exact_solve(net, prof, req, K, cands)
+    res_ilp = ilp_solve(net, prof, req, K, cands, time_limit_s=120)
+    assert res_dp.feasible == res_ilp.feasible
+    if res_dp.feasible:
+        assert res_ilp.latency_s == pytest.approx(res_dp.latency_s, rel=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_bcd_feasible_and_close(seed):
+    net, prof, req, K, cands = _random_instance(seed, n_nodes=8, L=10, K=4)
+    opt = exact_solve(net, prof, req, K, cands)
+    heur = bcd_solve(net, prof, req, K, cands)
+    if not opt.feasible:
+        return
+    assert heur.feasible
+    ev = PlanEvaluator(net, prof, req)
+    ev.check(heur.plan)  # constraints hold
+    assert heur.latency_s >= opt.latency_s - 1e-12  # exact is a true lower bound
+    assert heur.latency_s <= 1.5 * opt.latency_s  # near-optimal in practice
+    # BCD objective history is monotonically non-increasing (each half-step is
+    # an exact block minimization)
+    for a, b in zip(heur.history, heur.history[1:]):
+        assert b <= a + 1e-12
+
+
+def test_bcd_matches_ilp_on_paper_instance():
+    net = nsfnet(source="v4")
+    prof = resnet101_profile()
+    for mode, b, K in [(IF, 2, 3), (TR, 128, 3), (IF, 64, 4)]:
+        cands = [["v4"]] + [["v7", "v11"]] * (K - 2) + [["v13"]]
+        req = ServiceChainRequest("resnet101", "v4", "v13", b, mode)
+        opt = exact_solve(net, prof, req, K, cands)
+        heur = bcd_solve(net, prof, req, K, cands)
+        assert heur.latency_s == pytest.approx(opt.latency_s, rel=0.02)
+
+
+def test_comparison_schemes_never_beat_optimal():
+    net = nsfnet(source="v4")
+    prof = resnet101_profile()
+    for mode, b in [(IF, 2), (TR, 128)]:
+        for K in (2, 3, 5):
+            cands = ([["v4"]] + [["v7", "v11"], ["v9", "v2"], ["v5", "v12"]][: K - 2]
+                     + [["v13"]])
+            req = ServiceChainRequest("resnet101", "v4", "v13", b, mode)
+            opt = exact_solve(net, prof, req, K, cands)
+            for solver in (comp_ms_solve, comm_ms_solve):
+                r = solver(net, prof, req, K, cands)
+                if r.feasible:
+                    assert r.latency_s >= opt.latency_s - 1e-12
+
+
+def test_dfts_optimal_given_segments():
+    net, prof, req, K, cands = _random_instance(3, n_nodes=7, L=8, K=3)
+    from repro.core import even_split
+
+    segs = even_split(prof.L, K)
+    plan = dfts(net, prof, req, segs, cands)
+    ev = PlanEvaluator(net, prof, req)
+    # brute-force placements with per-cut shortest paths
+    best = float("inf")
+    for placement in itertools.product(*cands):
+        total, ok = 0.0, True
+        for (lo, hi), node in zip(segs, placement):
+            if not ev.segment_fits(node, lo, hi):
+                ok = False
+                break
+            total += ev.segment_comp_s(node, lo, hi)
+        if not ok:
+            continue
+        try:
+            for k in range(K - 1):
+                cut = segs[k][1]
+                fw = req.batch_size * prof.cut_bytes(cut, "FW")
+                bw = req.batch_size * prof.cut_bytes(cut, "BW") if req.mode == TR else None
+                c, _ = net.shortest_path(placement[k], placement[k + 1], fw, bw)
+                total += c
+            tail_bw = 0.0 if req.mode == TR else None
+            c, _ = net.shortest_path(placement[-1], req.destination, 0.0, tail_bw)
+            total += c
+        except ValueError:
+            continue
+        best = min(best, total)
+    if best == float("inf"):
+        assert plan is None
+    else:
+        assert plan is not None
+        assert ev.latency_s(plan) == pytest.approx(best, rel=1e-9)
+
+
+def test_training_is_roughly_double_inference():
+    """Paper Sec. VI-B: MSI latency ~ half of MSL (BW FLOPs = 2x FW; same sizes)."""
+    net = nsfnet(source="v4")
+    prof = resnet101_profile()
+    cands = [["v4"], ["v7", "v11"], ["v13"]]
+    for b in (8, 64):
+        inf_r = exact_solve(net, prof,
+                            ServiceChainRequest("r", "v4", "v13", b, IF), 3, cands)
+        tr_r = exact_solve(net, prof,
+                           ServiceChainRequest("r", "v4", "v13", b, TR), 3, cands)
+        assert tr_r.latency_s > 1.5 * inf_r.latency_s
+        assert tr_r.latency_s < 3.5 * inf_r.latency_s

@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 6e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Sk,Hq,Hkv,hd,causal,window,softcap",
+    [
+        (2, 128, 128, 4, 2, 64, True, None, None),
+        (1, 200, 200, 8, 1, 64, True, None, 50.0),  # MQA + softcap + ragged
+        (2, 256, 256, 4, 4, 128, True, 64, None),  # sliding window
+        (1, 64, 256, 2, 2, 64, False, None, None),  # cross attention
+        (1, 96, 96, 6, 3, 32, True, 32, 30.0),  # everything + tiny head
+    ],
+)
+def test_flash_attention(B, Sq, Sk, Hq, Hkv, hd, causal, window, softcap, dtype):
+    q = _rand((B, Sq, Hq, hd), dtype)
+    k = _rand((B, Sk, Hkv, hd), dtype)
+    v = _rand((B, Sk, Hkv, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, block_q=64, block_k=64)
+    expect = ref.reference_attention(q, k, v, causal=causal, window=window,
+                                     softcap=softcap)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,F,act", [
+    (4, 64, 96, 80, "none"),
+    (2, 128, 256, 128, "silu"),
+    (8, 40, 72, 200, "gelu"),  # ragged, padding exercised
+])
+def test_expert_matmul(E, C, D, F, act, dtype):
+    x = _rand((E, C, D), dtype)
+    w = _rand((E, D, F), dtype) * 0.1
+    out = ops.expert_matmul(x, w, activation=act, block_c=32, block_f=64,
+                            block_d=64)
+    expect = ref.reference_expert_matmul(x, w, activation=act)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=8 * TOL[dtype], rtol=8 * TOL[dtype])
+
+
+@pytest.mark.parametrize("B,S,W,bs,bw", [
+    (2, 64, 128, 16, 64),
+    (1, 100, 48, 32, 32),  # ragged
+    (3, 256, 512, 64, 256),
+])
+def test_rglru_scan(B, S, W, bs, bw):
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, (B, S, W)), jnp.float32)
+    b = _rand((B, S, W), jnp.float32) * 0.1
+    out = ops.rglru_scan(a, b, block_s=bs, block_w=bw)
+    expect = ref.reference_rglru_scan(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5,
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,Q", [
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 2, 64, 128, 64),
+])
+def test_ssd_intra_chunk(B, S, H, P, N, Q):
+    nc = S // Q
+    x = _rand((B, nc, H, Q, P), jnp.float32)
+    Bm = _rand((B, nc, Q, N), jnp.float32) * 0.3
+    Cm = _rand((B, nc, Q, N), jnp.float32) * 0.3
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, nc, H, Q)), jnp.float32)
+    A = jnp.asarray(RNG.uniform(0.5, 4.0, (H,)), jnp.float32)
+    y, hc, dec = ops.ssd_intra_chunk(x, Bm, Cm, dt, A)
+    ye, hce, dece = ref.reference_ssd_intra_chunk(x, Bm, Cm, dt, A)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hc), np.asarray(hce), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(dece), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_ssd_forward_matches_model_layer():
+    """The composed kernel path must equal the model's _ssd_chunked oracle."""
+    from repro.models.layers import _ssd_chunked
+
+    B, S, H, P, N, Q = 2, 128, 4, 32, 16, 32
+    x = _rand((B, S, H, P), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = jnp.asarray(RNG.uniform(0.5, 4.0, (H,)), jnp.float32)
+    Bm = _rand((B, S, N), jnp.float32) * 0.3
+    Cm = _rand((B, S, N), jnp.float32) * 0.3
+    y_k, h_k = ops.ssd_forward(x, dt, A, Bm, Cm, chunk=Q)
+    y_m, h_m = _ssd_chunked(x, dt, -A, Bm, Cm, None, chunk=Q)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_m), atol=1e-4,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_flash_attention_property(seed):
+    """Hypothesis-style randomized shapes (GQA divisibility respected)."""
+    rng = np.random.default_rng(seed)
+    hd = int(rng.choice([32, 64, 128]))
+    Hkv = int(rng.choice([1, 2, 4]))
+    G = int(rng.choice([1, 2, 4]))
+    Sq = int(rng.integers(16, 200))
+    q = _rand((1, Sq, Hkv * G, hd), jnp.float32)
+    k = _rand((1, Sq, Hkv, hd), jnp.float32)
+    v = _rand((1, Sq, Hkv, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+    expect = ref.reference_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-4,
+                               rtol=2e-4)

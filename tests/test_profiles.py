@@ -1,0 +1,76 @@
+"""Cost-model profiles: Table I fidelity + analytic arch profiles sanity."""
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import FW, BW, resnet101_profile
+from repro.models.profiles import active_params, model_profile, total_params
+
+EXPECTED_PARAMS_B = {  # nameplate sanity bands
+    "qwen3-moe-30b-a3b": (28, 33),
+    "arctic-480b": (450, 500),
+    "llama-3.2-vision-90b": (80, 95),
+    "qwen2-1.5b": (1.3, 1.8),
+    "starcoder2-7b": (6.5, 8.0),
+    "gemma2-27b": (25, 29),
+    "qwen3-14b": (13, 16),
+    "recurrentgemma-9b": (8.3, 10.5),
+    "whisper-small": (0.15, 0.4),
+    "mamba2-370m": (0.3, 0.45),
+}
+
+
+def test_resnet101_table1():
+    prof = resnet101_profile()
+    assert prof.L == 37
+    # spot values straight from Table I
+    assert prof.layers[0].flops_fw == pytest.approx(236.02e6)
+    assert prof.layers[2].mem_bytes == pytest.approx(3.02e6)
+    assert prof.layers[32].mem_bytes == pytest.approx(234.92e6)
+    assert prof.layers[35].act_bytes == 8192
+    assert prof.layers[36].act_bytes == 4000
+    # paper characteristics: (C1) middle layers dominate compute
+    mid = prof.seg_flops(3, 35, FW)
+    assert mid / prof.total_flops(FW) > 0.95
+    # (C2) smashed data size non-increasing after layer 2
+    acts = [l.act_bytes for l in prof.layers]
+    assert all(a >= b for a, b in zip(acts[2:], acts[3:]))
+    # BW = 2x FW (paper rounds to 3 significant digits, e.g. 12.9 vs 2x6.43)
+    for l in prof.layers:
+        assert l.flops_bw == pytest.approx(2 * l.flops_fw, rel=5e-3)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_profile_sane(arch):
+    cfg = ARCHS[arch]
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    n = total_params(cfg) / 1e9
+    assert lo <= n <= hi, f"{arch}: {n}B params out of band ({lo},{hi})"
+    assert active_params(cfg) <= total_params(cfg)
+    prof = model_profile(cfg, seq_len=4096, mode="train")
+    assert prof.L == 1 + cfg.enc_layers + cfg.n_layers + 1
+    for l in prof.layers:
+        assert l.flops_fw >= 0 and l.mem_bytes >= 0
+        assert l.flops_bw == pytest.approx(2 * l.flops_fw)
+    # decode flops per token << train flops per sequence (excluding encoder
+    # rows: the chain profile charges the enc once per request, not per token)
+    dec = model_profile(cfg, seq_len=4096, mode="decode", cache_len=32768)
+    dec_flops = sum(l.flops_fw for l in dec.layers[1 + cfg.enc_layers:])
+    assert dec_flops < prof.total_flops(FW) / 100
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "qwen3-moe-30b-a3b", "mamba2-370m"])
+def test_planner_runs_on_arch_profiles(arch):
+    """The paper's planner consumes every arch profile (DESIGN.md Sec. 3)."""
+    from repro.core import IF, TR, ServiceChainRequest, bcd_solve, exact_solve, tpu_pod_topology
+
+    cfg = ARCHS[arch]
+    prof = model_profile(cfg, seq_len=4096, mode="train")
+    net = tpu_pod_topology(n_groups=8, chips_per_group=32)
+    nodes = sorted(net.nodes)
+    K = 4
+    cands = [[nodes[0]]] + [nodes[1:4], nodes[4:7]] + [[nodes[-1]]]
+    req = ServiceChainRequest(cfg.name, nodes[0], nodes[-1], 8, TR)
+    opt = exact_solve(net, prof, req, K, cands)
+    heur = bcd_solve(net, prof, req, K, cands)
+    assert opt.feasible and heur.feasible
+    assert heur.latency_s <= 1.5 * opt.latency_s + 1e-9
