@@ -1,0 +1,23 @@
+PYTHON ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: verify test sweep-quick bench-quick clean
+
+## verify: tier-1 tests + one quick end-to-end sweep (the CI gate)
+verify: test sweep-quick
+
+## test: tier-1 test suite (ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+## sweep-quick: quick NSFNET paper-grid sweep through the scenario engine
+sweep-quick:
+	$(PYTHON) -m repro.sweep --suite nsfnet_paper --quick --out sweep_out
+
+## bench-quick: all paper-figure benchmarks at the reduced CI tier
+bench-quick:
+	$(PYTHON) -m benchmarks.run --quick
+
+clean:
+	rm -rf sweep_out .pytest_cache
+	find . -name __pycache__ -type d -prune -exec rm -rf {} +

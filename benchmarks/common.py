@@ -1,13 +1,14 @@
-"""Shared setup for the paper-reproduction benchmarks."""
+"""Shared setup for the paper-reproduction benchmarks.
+
+The scenario grids themselves live in ``repro.sweep.suites``; this module keeps
+the CSV row type plus thin compatibility wrappers for scripts that still build
+one-off instances by hand.
+"""
 from __future__ import annotations
 
-import random
 from dataclasses import dataclass
 
 from repro.core import (
-    IF,
-    TR,
-    ServiceChainRequest,
     bcd_solve,
     comm_ms_solve,
     comp_ms_solve,
@@ -16,8 +17,8 @@ from repro.core import (
     nsfnet,
     resnet101_profile,
 )
-
-SOURCE, DEST = "v4", "v13"
+from repro.sweep.spec import candidate_sets as _candidate_sets
+from repro.sweep.suites import DEST, NSFNET_NODES, SOURCE
 
 # `exact` is the provably-ILP-equivalent joint DP (tests/test_core_solvers.py
 # proves equality with the HiGHS MILP); the latency grids use it so the full
@@ -34,17 +35,8 @@ SOLVERS = {
 
 def candidate_sets(K: int, seed: int, nodes: list[str] | None = None,
                    source: str = SOURCE, dest: str = DEST) -> list[list[str]]:
-    """Paper Sec. VI-A2: first/last pinned to s/d; each intermediate sub-model
-    gets |V^k| = 2 randomly, distinctly selected candidate nodes."""
-    rng = random.Random(seed * 1000 + K)
-    nodes = nodes or [f"v{i}" for i in range(1, 15)]
-    mids = [n for n in nodes if n not in (source, dest)]
-    picked = rng.sample(mids, 2 * (K - 2)) if K > 2 else []
-    cands = [[source]]
-    for k in range(K - 2):
-        cands.append(picked[2 * k : 2 * k + 2])
-    cands.append([dest])
-    return cands
+    """Paper Sec. VI-A2 candidate policy (delegates to the sweep engine)."""
+    return _candidate_sets(K, seed, nodes or NSFNET_NODES, source, dest)
 
 
 @dataclass
@@ -55,6 +47,14 @@ class Row:
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def group_in_order(results, keyfn):
+    """Group sweep results by keyfn preserving first-seen (suite) order."""
+    cells: dict = {}
+    for r in results:
+        cells.setdefault(keyfn(r), []).append(r)
+    return cells
 
 
 def solve(scheme: str, net, profile, request, K, cands, **kw):

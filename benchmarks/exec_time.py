@@ -5,59 +5,46 @@ The paper's limit is 1000 s on a 36-core Xeon; this container has 1 core, so the
 default ILP time limit is scaled to 120 s (the qualitative result — ILP times out
 for V >= 30 while BCD stays in the tens of milliseconds — is preserved; see
 EXPERIMENTS.md).
+
+Scenario grids come from the sweep engine (``exec_time_k`` / ``random_scaling``
+suites).  Execution is strictly serial with the shared-cache context disabled
+(``use_context_cache=False``): wall time is the measurement here, and warm
+cross-scenario caches would flatter whichever scheme runs later.
 """
 from __future__ import annotations
 
-import time
+from repro.sweep import SweepRunner
+from repro.sweep.suites import exec_time_k, random_scaling
 
-from repro.core import TR, ServiceChainRequest, random_network
+from .common import Row, group_in_order
 
-from .common import DEST, SOURCE, Row, candidate_sets, paper_instance, solve
 
-SCHEMES = ["ilp", "bcd", "comp-ms", "comm-ms"]
+def _cold_runner() -> SweepRunner:
+    return SweepRunner(workers=0, use_context_cache=False)
 
 
 def run_k_sweep(quick: bool = False, ilp_time_limit: float = 120.0) -> list[Row]:
-    net, prof = paper_instance()
+    specs = exec_time_k(quick=quick, ilp_time_limit_s=ilp_time_limit)
+    results = _cold_runner().run(specs)
+    cells = group_in_order(results, lambda r: (r.spec.K, r.spec.solver))
     rows: list[Row] = []
-    ks = [2, 4] if quick else range(2, 8)
-    for K in ks:
-        n_seeds = 1 if (quick or K >= 6) else 3  # big-K MILPs are slow (1 core)
-        for scheme in SCHEMES:
-            times, n_feas = [], 0
-            for seed in range(n_seeds):
-                req = ServiceChainRequest("resnet101", SOURCE, DEST, 128, TR)
-                kw = {"time_limit_s": ilp_time_limit} if scheme == "ilp" else {}
-                res = solve(scheme, net, prof, req, K, candidate_sets(K, seed), **kw)
-                times.append(res.wall_time_s)
-                n_feas += int(res.feasible)
-            avg = sum(times) / len(times)
-            rows.append(Row(f"fig10_K{K}_{scheme}", avg * 1e6,
-                            f"exec_time_ms={avg*1e3:.2f};feasible={n_feas}/{n_seeds}"))
+    for (K, scheme), rs in cells.items():
+        avg = sum(r.wall_time_s for r in rs) / len(rs)
+        n_feas = sum(r.feasible for r in rs)
+        rows.append(Row(f"fig10_K{K}_{scheme}", avg * 1e6,
+                        f"exec_time_ms={avg*1e3:.2f};feasible={n_feas}/{len(rs)}"))
     return rows
 
 
 def run_v_sweep(quick: bool = False, ilp_time_limit: float = 120.0) -> list[Row]:
+    specs = random_scaling(quick=quick, ilp_time_limit_s=ilp_time_limit)
+    results = _cold_runner().run(specs)
     rows: list[Row] = []
-    vs = [10, 20] if quick else [10, 20, 30, 40, 50]
-    prof = paper_instance()[1]
-    K = 4
-    for V in vs:
-        net = random_network(V, p=0.2, seed=7, source="v1")
-        nodes = sorted(net.nodes)
-        dest = nodes[-1]
-        req = ServiceChainRequest("resnet101", "v1", dest, 128, TR)
-        for scheme in SCHEMES:
-            if scheme == "ilp" and V >= 30 and quick:
-                continue
-            cands = candidate_sets(K, 0, nodes=nodes, source="v1", dest=dest)
-            kw = {"time_limit_s": ilp_time_limit} if scheme == "ilp" else {}
-            t0 = time.perf_counter()
-            res = solve(scheme, net, prof, req, K, cands, **kw)
-            wall = time.perf_counter() - t0
-            status = "ok" if res.feasible else "timeout/infeasible"
-            rows.append(Row(f"fig11_V{V}_{scheme}", wall * 1e6,
-                            f"exec_time_ms={wall*1e3:.2f};{status}"))
+    for r in results:
+        V = r.spec.topology_kwargs["n_nodes"]
+        status = "ok" if r.feasible else "timeout/infeasible"
+        rows.append(Row(f"fig11_V{V}_{r.spec.solver}", r.wall_time_s * 1e6,
+                        f"exec_time_ms={r.wall_time_s*1e3:.2f};{status}"))
     return rows
 
 

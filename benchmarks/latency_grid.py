@@ -1,49 +1,45 @@
 """Figs. 4 & 5: inference / training latency per batch vs (K, b) for every scheme.
 
 Averaged over seeds (paper: 10 trials).  The optimal scheme is the ILP-equivalent
-exact DP; `bcd`, `comp-ms`, `comm-ms` as in the paper.
+exact DP; `bcd`, `comp-ms`, `comm-ms` as in the paper.  The grid is the
+``nsfnet_paper`` suite of the sweep engine, executed through ``SweepRunner`` so
+compute/fit tables and Dijkstra frontiers are shared across the whole grid.
 """
 from __future__ import annotations
 
-from repro.core import IF, TR, ServiceChainRequest
+from repro.core import IF
+from repro.sweep import SweepRunner
+from repro.sweep.suites import nsfnet_paper
 
-from .common import DEST, SOURCE, Row, candidate_sets, paper_instance, solve
-
-K_RANGE = range(2, 8)
-B_RANGE = [2**i for i in range(0, 9)]  # 1..256
-SCHEMES = ["exact", "bcd", "comp-ms", "comm-ms"]
+from .common import Row, group_in_order
 
 
-def run(mode: str = IF, seeds: int = 10, quick: bool = False) -> list[Row]:
-    net, prof = paper_instance()
-    ks = [2, 3, 5] if quick else list(K_RANGE)
-    bs = [2, 128] if quick else B_RANGE
-    n_seeds = 3 if quick else seeds
+def run(mode: str = IF, seeds: int = 10, quick: bool = False,
+        workers: int = 0) -> list[Row]:
+    specs = nsfnet_paper(quick=quick, modes=(mode,), seeds=seeds)
+    results = SweepRunner(workers=workers).run(specs)
+
+    # aggregate seeds per (figure, K, b, scheme) cell, in suite order
+    cells = group_in_order(
+        results, lambda r: (r.spec.tags["figure"], r.spec.K,
+                            r.spec.batch_size, r.spec.solver))
+
     rows: list[Row] = []
-    fig = "fig4" if mode == IF else "fig5"
-    for K in ks:
-        for b in bs:
-            req = ServiceChainRequest("resnet101", SOURCE, DEST, b, mode)
-            for scheme in SCHEMES:
-                tot, n_feas, comp, trans, prop = 0.0, 0, 0.0, 0.0, 0.0
-                for seed in range(n_seeds):
-                    cands = candidate_sets(K, seed)
-                    res = solve(scheme, net, prof, req, K, cands)
-                    if res.feasible:
-                        n_feas += 1
-                        tot += res.latency_s
-                        comp += res.latency.computation_s
-                        trans += res.latency.transmission_s
-                        prop += res.latency.propagation_s
-                if n_feas == 0:
-                    rows.append(Row(f"{fig}_{mode}_K{K}_b{b}_{scheme}", float("nan"),
-                                    "infeasible"))
-                    continue
-                rows.append(Row(
-                    f"{fig}_{mode}_K{K}_b{b}_{scheme}",
-                    tot / n_feas * 1e6,
-                    f"latency_ms={tot / n_feas * 1e3:.2f};comp_ms={comp / n_feas * 1e3:.2f};"
-                    f"trans_ms={trans / n_feas * 1e3:.2f};prop_ms={prop / n_feas * 1e3:.2f};"
-                    f"feasible={n_feas}/{n_seeds}",
-                ))
+    for (fig, K, b, scheme), rs in cells.items():
+        feas = [r for r in rs if r.feasible]
+        name = f"{fig}_{mode}_K{K}_b{b}_{scheme}"
+        if not feas:
+            rows.append(Row(name, float("nan"), "infeasible"))
+            continue
+        n = len(feas)
+        tot = sum(r.latency_s for r in feas) / n
+        comp = sum(r.computation_s for r in feas) / n
+        trans = sum(r.transmission_s for r in feas) / n
+        prop = sum(r.propagation_s for r in feas) / n
+        rows.append(Row(
+            name, tot * 1e6,
+            f"latency_ms={tot * 1e3:.2f};comp_ms={comp * 1e3:.2f};"
+            f"trans_ms={trans * 1e3:.2f};prop_ms={prop * 1e3:.2f};"
+            f"feasible={n}/{len(rs)}",
+        ))
     return rows

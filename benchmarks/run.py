@@ -1,9 +1,13 @@
 """Benchmark driver — one suite per paper table/figure, plus the roofline table.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--suite NAME ...]
+                                                [--workers N]
 
-Prints ``name,us_per_call,derived`` CSV rows (and echoes section headers on
-stderr so the CSV stays machine-readable).
+The paper-figure suites are backed by the scenario-sweep engine
+(``repro.sweep``): ``--quick`` selects each suite's reduced CI grid, and
+``--workers`` fans the latency grids out over processes.  Prints
+``name,us_per_call,derived`` CSV rows (and echoes section headers on stderr so
+the CSV stays machine-readable).
 """
 from __future__ import annotations
 
@@ -12,18 +16,38 @@ import sys
 import time
 
 
+def _sweep_rows(suite_name: str, quick: bool) -> list:
+    """Run a repro.sweep suite and flatten its results into benchmark rows."""
+    from repro.sweep import SweepRunner
+    from repro.sweep.suites import SUITES
+
+    from .common import Row
+
+    results = SweepRunner(workers=0).run(SUITES[suite_name](quick=quick))
+    rows = []
+    for r in results:
+        s = r.spec
+        cell = s.tags.get("cell", s.scenario_id())
+        derived = ("infeasible" if not r.feasible else
+                   f"latency_ms={r.latency_s*1e3:.2f};"
+                   f"exec_time_ms={r.wall_time_s*1e3:.2f}")
+        rows.append(Row(f"{suite_name}_{cell}_{s.solver}",
+                        (r.latency_s or float("nan")) * 1e6, derived))
+    return rows
+
+
 def _suites():
     from . import breakdown, exec_time, latency_grid, worked_examples
 
-    def fig4(quick):
+    def fig4(quick, workers=0):
         from repro.core import IF
 
-        return latency_grid.run(IF, quick=quick)
+        return latency_grid.run(IF, quick=quick, workers=workers)
 
-    def fig5(quick):
+    def fig5(quick, workers=0):
         from repro.core import TR
 
-        return latency_grid.run(TR, quick=quick)
+        return latency_grid.run(TR, quick=quick, workers=workers)
 
     suites = {
         "fig4_inference_latency": fig4,
@@ -31,6 +55,8 @@ def _suites():
         "fig6_fig7_worked_examples": worked_examples.run,
         "fig8_fig9_breakdown": breakdown.run,
         "fig10_fig11_exec_time": exec_time.run,
+        "sweep_tpu_pod": lambda quick: _sweep_rows("tpu_pod", quick),
+        "sweep_faults": lambda quick: _sweep_rows("nsfnet_faults", quick),
     }
     try:
         from . import roofline_table
@@ -52,6 +78,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced grids (CI-friendly)")
     ap.add_argument("--suite", nargs="*", default=None)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="process fan-out for the latency-grid suites")
     args = ap.parse_args()
     suites = _suites()
     names = args.suite or list(suites)
@@ -62,7 +90,11 @@ def main() -> None:
             continue
         t0 = time.perf_counter()
         print(f"# --- {name} ---", file=sys.stderr)
-        for row in suites[name](quick=args.quick):
+        kw = {}
+        if args.workers and name in ("fig4_inference_latency",
+                                     "fig5_training_latency"):
+            kw["workers"] = args.workers
+        for row in suites[name](quick=args.quick, **kw):
             print(row.csv())
         print(f"# {name} done in {time.perf_counter()-t0:.1f}s", file=sys.stderr)
 

@@ -2,32 +2,24 @@
 
 Solves model splitting + placement + chaining with all four schemes (exact
 ILP-equivalent DP, BCD, COMP-MS, COMM-MS) for MSI (K=3, b=2) and MSL (K=3,
-b=128) and prints Fig. 6/7-style service paths.
+b=128) and prints Fig. 6/7-style service paths.  Scenarios are declared as
+``repro.sweep`` specs and executed through the engine — the same path the
+benchmark grids and the ``python -m repro.sweep`` CLI use.
 
   PYTHONPATH=src python examples/msl_nsfnet.py
 """
-from repro.core import (
-    IF,
-    TR,
-    PlanEvaluator,
-    ServiceChainRequest,
-    bcd_solve,
-    comm_ms_solve,
-    comp_ms_solve,
-    exact_solve,
-    nsfnet,
-    resnet101_profile,
-)
+from repro.core import IF, TR, PlanEvaluator
+from repro.sweep import ScenarioSpec, SweepRunner
 
-SCHEMES = [("optimal", exact_solve), ("bcd", bcd_solve),
-           ("comp-ms", comp_ms_solve), ("comm-ms", comm_ms_solve)]
+SCHEMES = ["exact", "bcd", "comp-ms", "comm-ms"]
+CANDIDATES = [["v4"], ["v7", "v11"], ["v13"]]
 
 
-def show(res, ev) -> None:
-    if not res.feasible:
+def show(result, ev) -> None:
+    if not result.feasible:
         print("   infeasible")
         return
-    p = res.plan
+    p = result.plan()
     for k, ((lo, hi), node) in enumerate(zip(p.segments, p.placement)):
         print(f"   F{k+1} = layers {lo}-{hi} @ {node} "
               f"(comp {ev.segment_comp_s(node, lo, hi)*1e3:.1f} ms)")
@@ -35,24 +27,34 @@ def show(res, ev) -> None:
         trans, prop = ev.cut_transfer_s(path, p.segments[k][1])
         print(f"   S{k+2}: {'->'.join(path)} (trans {trans*1e3:.1f} ms, "
               f"prop {prop*1e3:.1f} ms)")
-    lb = res.latency
-    print(f"   total {lb.total_s*1e3:.1f} ms  (comp {lb.computation_s*1e3:.1f} "
-          f"/ trans {lb.transmission_s*1e3:.1f} / prop {lb.propagation_s*1e3:.1f})"
-          f"  solved in {res.wall_time_s*1e3:.1f} ms")
+    print(f"   total {result.latency_s*1e3:.1f} ms  "
+          f"(comp {result.computation_s*1e3:.1f} "
+          f"/ trans {result.transmission_s*1e3:.1f} "
+          f"/ prop {result.propagation_s*1e3:.1f})"
+          f"  solved in {result.wall_time_s*1e3:.1f} ms")
 
 
 def main() -> None:
-    net = nsfnet(source="v4")
-    prof = resnet101_profile()
-    cands = [["v4"], ["v7", "v11"], ["v13"]]
+    runner = SweepRunner(workers=0)
     for mode, b, title in [(IF, 2, "MSI (inference), K=3, b=2"),
                            (TR, 128, "MSL (training), K=3, b=128")]:
         print(f"\n=== {title} ===")
-        req = ServiceChainRequest("resnet101", "v4", "v13", b, mode)
-        ev = PlanEvaluator(net, prof, req)
-        for name, solver in SCHEMES:
+        specs = [
+            ScenarioSpec(topology="nsfnet", topology_kwargs={"source": "v4"},
+                         profile="resnet101", source="v4", destination="v13",
+                         batch_size=b, mode=mode, K=3, solver=scheme,
+                         candidates=CANDIDATES,
+                         tags={"suite": "msl_nsfnet_example"})
+            for scheme in SCHEMES
+        ]
+        results = runner.run(specs)
+        spec0 = specs[0]
+        ev = PlanEvaluator(spec0.build_network(), spec0.build_profile(),
+                           spec0.request())
+        for scheme, result in zip(SCHEMES, results):
+            name = "optimal" if scheme == "exact" else scheme
             print(f" {name}:")
-            show(solver(net, prof, req, 3, cands), ev)
+            show(result, ev)
 
 
 if __name__ == "__main__":

@@ -29,7 +29,8 @@ from .dfts import dfts
 from .exact import exact_solve
 from .ilp import ilp_solve
 from .network import LinkSpec, NodeSpec, PhysicalNetwork, transmission_time_s
-from .plan import LatencyBreakdown, Plan, PlanEvaluator, ServiceChainRequest
+from .plan import (EvalCache, LatencyBreakdown, Plan, PlanEvaluator,
+                   ServiceChainRequest)
 from .resnet101_profile import resnet101_profile
 from .segmentation import k_sequence_segmentation
 from .topology import nsfnet, random_network, tpu_pod_topology
@@ -37,7 +38,7 @@ from .topology import nsfnet, random_network, tpu_pod_topology
 __all__ = [
     "BW", "FW", "IF", "TR",
     "CPU_XEON_6226R", "GPU_RTX_A6000", "ComputeModel",
-    "LayerProfile", "ModelProfile", "LatencyBreakdown",
+    "EvalCache", "LayerProfile", "ModelProfile", "LatencyBreakdown",
     "Plan", "PlanEvaluator", "ServiceChainRequest", "SolveResult",
     "LinkSpec", "NodeSpec", "PhysicalNetwork",
     "bcd_solve", "exact_solve", "ilp_solve", "comp_ms_solve", "comm_ms_solve",

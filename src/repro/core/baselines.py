@@ -14,7 +14,7 @@ from .bcd import SolveResult
 from .costmodel import BW, FW, TR, ModelProfile, dirs_for_mode
 from .dfts import dfts
 from .network import PhysicalNetwork
-from .plan import PlanEvaluator, ServiceChainRequest
+from .plan import EvalCache, PlanEvaluator, ServiceChainRequest
 
 INF = float("inf")
 
@@ -138,23 +138,26 @@ def _two_step(
     candidates: list[list[str]],
     segments: list[tuple[int, int]] | None,
     name: str,
+    cache: EvalCache | None = None,
 ) -> SolveResult:
     t0 = time.perf_counter()
     if segments is None:
         return SolveResult(None, None, time.perf_counter() - t0, solver=name)
-    plan = dfts(net, profile, request, segments, candidates)
+    plan = dfts(net, profile, request, segments, candidates, cache=cache)
     if plan is None:
         return SolveResult(None, None, time.perf_counter() - t0, solver=name)
-    ev = PlanEvaluator(net, profile, request)
+    ev = PlanEvaluator(net, profile, request, cache=cache)
     return SolveResult(plan, ev.evaluate(plan), time.perf_counter() - t0, 1,
                        solver=name)
 
 
-def comp_ms_solve(net, profile, request, K, candidates) -> SolveResult:
+def comp_ms_solve(net, profile, request, K, candidates,
+                  cache: EvalCache | None = None) -> SolveResult:
     segs = comp_ms_split(net, profile, request, K, candidates)
-    return _two_step(net, profile, request, K, candidates, segs, "comp-ms")
+    return _two_step(net, profile, request, K, candidates, segs, "comp-ms", cache)
 
 
-def comm_ms_solve(net, profile, request, K, candidates) -> SolveResult:
+def comm_ms_solve(net, profile, request, K, candidates,
+                  cache: EvalCache | None = None) -> SolveResult:
     segs = comm_ms_split(profile, request, K, net, candidates)
-    return _two_step(net, profile, request, K, candidates, segs, "comm-ms")
+    return _two_step(net, profile, request, K, candidates, segs, "comm-ms", cache)

@@ -13,7 +13,8 @@ from dataclasses import dataclass, field
 from .costmodel import ModelProfile, even_split
 from .dfts import dfts
 from .network import PhysicalNetwork
-from .plan import LatencyBreakdown, Plan, PlanEvaluator, ServiceChainRequest
+from .plan import (EvalCache, LatencyBreakdown, Plan, PlanEvaluator,
+                   ServiceChainRequest)
 from .segmentation import k_sequence_segmentation
 
 
@@ -43,13 +44,15 @@ def bcd_solve(
     candidates: list[list[str]],
     eps: float = 0.0,
     max_iters: int = 50,
+    cache: EvalCache | None = None,
 ) -> SolveResult:
     t0 = time.perf_counter()
-    ev = PlanEvaluator(net, profile, request)
+    cache = cache if cache is not None else EvalCache()
+    ev = PlanEvaluator(net, profile, request, cache=cache)
 
     # initialization (Alg. 1 lines 1-4): even split y_0, then DFTS for x_0.
     segments = even_split(profile.L, K)
-    plan = dfts(net, profile, request, segments, candidates)
+    plan = dfts(net, profile, request, segments, candidates, cache=cache)
     if plan is None:
         # The even split y_0 may itself violate (14)-(15) everywhere.  Fall back
         # to a capacity-aware initial split: minimize the per-segment peak memory
@@ -58,7 +61,7 @@ def bcd_solve(
 
         segments = min_memory_split(profile, request, K)
         if segments is not None:
-            plan = dfts(net, profile, request, segments, candidates)
+            plan = dfts(net, profile, request, segments, candidates, cache=cache)
     if plan is None:
         return SolveResult(None, None, time.perf_counter() - t0, 0)
 
@@ -66,10 +69,12 @@ def bcd_solve(
     history = [prev]
     iters = 0
     for iters in range(1, max_iters + 1):
-        new_segments = k_sequence_segmentation(net, profile, request, plan)
+        new_segments = k_sequence_segmentation(net, profile, request, plan,
+                                               cache=cache)
         if new_segments is None:
             break
-        new_plan = dfts(net, profile, request, new_segments, candidates)
+        new_plan = dfts(net, profile, request, new_segments, candidates,
+                        cache=cache)
         if new_plan is None:
             break
         cur = ev.latency_s(new_plan)

@@ -124,10 +124,19 @@ class LayerProfile:
 
 @dataclass
 class ModelProfile:
-    """The planner's view of a global model F: an ordered list of L layers."""
+    """The planner's view of a global model F: an ordered list of L layers.
+
+    Segment aggregates are served from lazily-built prefix-sum tables so the
+    O(K L^2) solver DPs pay O(1) per segment query instead of O(L).  The layer
+    list must not be mutated after the first query; call :meth:`invalidate_cache`
+    if you do.
+    """
 
     model_id: str
     layers: list[LayerProfile]
+    _cum: dict | None = field(default=None, init=False, repr=False, compare=False)
+    _peak_memo: dict = field(default_factory=dict, init=False, repr=False,
+                             compare=False)
 
     def __post_init__(self) -> None:
         if len(self.layers) < 2:
@@ -137,22 +146,50 @@ class ModelProfile:
     def L(self) -> int:
         return len(self.layers)
 
+    def invalidate_cache(self) -> None:
+        """Drop the prefix-sum tables after mutating ``layers`` in place."""
+        self._cum = None
+        self._peak_memo.clear()
+
+    def _cumsums(self) -> dict:
+        if self._cum is None:
+            def cum(vals: list[float]) -> list[float]:
+                out = [0.0] * (len(vals) + 1)
+                for i, v in enumerate(vals):
+                    out[i + 1] = out[i] + v
+                return out
+
+            self._cum = {
+                (FW, "flops"): cum([l.flops_fw for l in self.layers]),
+                (BW, "flops"): cum([l.flops_bw for l in self.layers]),
+                "mem": cum([l.mem_bytes for l in self.layers]),
+                "disk": cum([l.disk_bytes for l in self.layers]),
+            }
+        return self._cum
+
     # --- segment aggregates (segments are 1-indexed inclusive [lo, hi]) ----------
     def seg_flops(self, lo: int, hi: int, direction: str) -> float:
-        return sum(l.flops(direction) for l in self.layers[lo - 1 : hi])
+        c = self._cumsums()[(direction, "flops")]
+        return c[hi] - c[lo - 1]
 
     def seg_mem_bytes(self, lo: int, hi: int) -> float:
-        return sum(l.mem_bytes for l in self.layers[lo - 1 : hi])
+        c = self._cumsums()["mem"]
+        return c[hi] - c[lo - 1]
 
     def seg_disk_bytes(self, lo: int, hi: int) -> float:
-        return sum(l.disk_bytes for l in self.layers[lo - 1 : hi])
+        c = self._cumsums()["disk"]
+        return c[hi] - c[lo - 1]
 
     def seg_peak_smashed(self, lo: int, hi: int, mode: str) -> float:
         """max_{l in seg, dir in D(mode)} delta_l^dir  (constraint (15) 2nd term)."""
-        peak = 0.0
-        for l in self.layers[lo - 1 : hi]:
-            for d in dirs_for_mode(mode):
-                peak = max(peak, l.smashed_bytes(d))
+        key = (lo, hi, mode)
+        peak = self._peak_memo.get(key)
+        if peak is None:
+            peak = 0.0
+            for l in self.layers[lo - 1 : hi]:
+                for d in dirs_for_mode(mode):
+                    peak = max(peak, l.smashed_bytes(d))
+            self._peak_memo[key] = peak
         return peak
 
     def cut_bytes(self, cut_after: int, direction: str) -> float:

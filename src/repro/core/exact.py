@@ -22,7 +22,7 @@ from .bcd import SolveResult
 from .costmodel import BW, FW, TR, ModelProfile
 from .dfts import _backtrack
 from .network import PhysicalNetwork
-from .plan import Plan, PlanEvaluator, ServiceChainRequest
+from .plan import EvalCache, Plan, PlanEvaluator, ServiceChainRequest
 
 INF = float("inf")
 
@@ -33,22 +33,24 @@ def exact_solve(
     request: ServiceChainRequest,
     K: int,
     candidates: list[list[str]],
+    cache: EvalCache | None = None,
 ) -> SolveResult:
     t0 = time.perf_counter()
     L = profile.L
-    ev = PlanEvaluator(net, profile, request)
+    ev = PlanEvaluator(net, profile, request, cache=cache)
     b = request.batch_size
     training = request.mode == TR
 
     # --- per-cut shortest-path tables between candidate nodes ------------------
-    # sp[cut][j] = (dist map, parent map) from source j with the cut's link costs.
+    # sp[cut][j] = (dist map, parent map) from source j with the cut's link costs;
+    # served from the network's frontier cache, shared across solver calls.
     sources = sorted({j for cand in candidates[:-1] for j in cand})
     sp: dict[tuple[int, str], tuple[dict[str, float], dict[str, str | None]]] = {}
     for cut in range(1, L):
         fw = b * profile.cut_bytes(cut, FW)
         bw = b * profile.cut_bytes(cut, BW) if training else None
         for j in sources:
-            sp[(cut, j)] = net.dijkstra({j: 0.0}, fw, bw)
+            sp[(cut, j)] = net.sssp(j, fw, bw)
 
     # --- DP ---------------------------------------------------------------------
     # dp[k][e][i]; store parents for reconstruction.

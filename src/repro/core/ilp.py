@@ -83,6 +83,8 @@ def ilp_solve(
     K: int,
     candidates: list[list[str]],
     time_limit_s: float | None = 1000.0,
+    cache: object | None = None,  # accepted for solver-API uniformity; the MILP
+    # builds its own coefficient tables and has nothing to memoize across calls.
 ) -> SolveResult:
     t0 = time.perf_counter()
     L = profile.L

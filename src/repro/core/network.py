@@ -46,13 +46,20 @@ def transmission_time_s(size_bytes: float, rate_bps: float) -> float:
 class PhysicalNetwork:
     nodes: dict[str, NodeSpec] = field(default_factory=dict)
     links: dict[tuple[str, str], LinkSpec] = field(default_factory=dict)
+    # Cached single-source Dijkstra frontiers keyed (source, fw_bytes, bw_bytes);
+    # invalidated whenever the topology mutates.  Shared by DFTS / the exact DP
+    # across solver calls and across sweep grid points on the same network.
+    _sssp_cache: dict = field(default_factory=dict, init=False, repr=False,
+                              compare=False)
 
     def add_node(self, spec: NodeSpec) -> None:
         self.nodes[spec.name] = spec
+        self._sssp_cache.clear()
 
     def add_link(self, u: str, v: str, spec: LinkSpec) -> None:
         assert u in self.nodes and v in self.nodes
         self.links[(u, v)] = spec
+        self._sssp_cache.clear()
 
     def add_bidirectional(self, u: str, v: str, spec: LinkSpec) -> None:
         self.add_link(u, v, spec)
@@ -106,6 +113,27 @@ class PhysicalNetwork:
                     parent[v] = u
                     heapq.heappush(pq, (nd, v))
         return dist, parent
+
+    def sssp(
+        self, source: str, fw_bytes: float, bw_bytes: float | None
+    ) -> tuple[dict[str, float], dict[str, str | None]]:
+        """Cached single-source Dijkstra frontier for one smashed-data size.
+
+        The (dist, parent) maps are memoized per (source, fw_bytes, bw_bytes);
+        treat them as immutable.  Stage relaxations over a candidate *set* are
+        the min-composition of these frontiers (dist_S(v) = min_s d0[s] +
+        dist_s(v)), so one cache serves every multi-source tour query.
+        """
+        key = (source, fw_bytes, bw_bytes)
+        hit = self._sssp_cache.get(key)
+        if hit is None:
+            hit = self.dijkstra({source: 0.0}, fw_bytes, bw_bytes)
+            self._sssp_cache[key] = hit
+        return hit
+
+    def clear_routing_cache(self) -> None:
+        """Drop cached frontiers (needed only after mutating a LinkSpec in place)."""
+        self._sssp_cache.clear()
 
     def shortest_path(
         self, src: str, dst: str, fw_bytes: float, bw_bytes: float | None

@@ -66,24 +66,49 @@ class Plan:
         return [hi for (_, hi) in self.segments[:-1]]
 
 
+class EvalCache:
+    """Memo tables for per-(node, segment) compute time and capacity checks.
+
+    Valid only for a fixed (network, profile, batch_size, mode) — the sweep
+    runner keys shared instances that way so the tables persist across solver
+    calls and across grid points (e.g. all seeds/schemes of one (K, b) cell).
+    Solvers that receive no cache build a private one per call, which still
+    collapses the repeated segment queries inside their own DP loops.
+    """
+
+    __slots__ = ("comp", "fits")
+
+    def __init__(self) -> None:
+        self.comp: dict[tuple[str, int, int], float] = {}
+        self.fits: dict[tuple[str, int, int], bool] = {}
+
+
 class PlanEvaluator:
     """Evaluates T(x, y, b, mode) and checks constraints for concrete plans."""
 
     def __init__(self, net: PhysicalNetwork, profile: ModelProfile,
-                 request: ServiceChainRequest):
+                 request: ServiceChainRequest, cache: EvalCache | None = None):
         self.net = net
         self.profile = profile
         self.request = request
+        self.cache = cache if cache is not None else EvalCache()
 
     # ------------------------------------------------------------- feasibility
     def segment_fits(self, node: str, lo: int, hi: int) -> bool:
         """Constraints (14) disk and (15) memory for sub-model [lo, hi] at node."""
+        key = (node, lo, hi)
+        hit = self.cache.fits.get(key)
+        if hit is not None:
+            return hit
         spec = self.net.nodes[node]
-        if self.profile.seg_disk_bytes(lo, hi) > spec.disk_capacity:
-            return False
-        mem = self.profile.seg_mem_bytes(lo, hi)
-        mem += self.request.batch_size * self.profile.seg_peak_smashed(lo, hi, self.request.mode)
-        return mem <= spec.mem_capacity
+        ok = self.profile.seg_disk_bytes(lo, hi) <= spec.disk_capacity
+        if ok:
+            mem = self.profile.seg_mem_bytes(lo, hi)
+            mem += (self.request.batch_size
+                    * self.profile.seg_peak_smashed(lo, hi, self.request.mode))
+            ok = mem <= spec.mem_capacity
+        self.cache.fits[key] = ok
+        return ok
 
     def check(self, plan: Plan) -> None:
         validate_segments(plan.segments, self.profile.L)
@@ -99,11 +124,16 @@ class PlanEvaluator:
     # ------------------------------------------------------------------ latency
     def segment_comp_s(self, node: str, lo: int, hi: int) -> float:
         """T^comp for sub-model [lo, hi] at node, FW (+BW if training) — Eq. (17)."""
+        key = (node, lo, hi)
+        hit = self.cache.comp.get(key)
+        if hit is not None:
+            return hit
         cm = self.net.nodes[node].compute
         b = self.request.batch_size
         total = 0.0
         for d in dirs_for_mode(self.request.mode):
             total += cm.comp_time_s(b, self.profile.seg_flops(lo, hi, d))
+        self.cache.comp[key] = total
         return total
 
     def cut_transfer_s(self, path: list[str], cut_after: int) -> tuple[float, float]:

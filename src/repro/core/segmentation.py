@@ -13,7 +13,7 @@ from __future__ import annotations
 
 from .costmodel import BW, FW, TR, ModelProfile
 from .network import PhysicalNetwork
-from .plan import Plan, PlanEvaluator, ServiceChainRequest
+from .plan import EvalCache, Plan, PlanEvaluator, ServiceChainRequest
 
 INF = float("inf")
 
@@ -46,10 +46,11 @@ def k_sequence_segmentation(
     profile: ModelProfile,
     request: ServiceChainRequest,
     plan: Plan,
+    cache: EvalCache | None = None,
 ) -> list[tuple[int, int]] | None:
     """Re-split L layers into K segments for plan's fixed placement/chaining."""
     K, L = plan.K, profile.L
-    ev = PlanEvaluator(net, profile, request)
+    ev = PlanEvaluator(net, profile, request, cache=cache)
     placement, paths = plan.placement, plan.paths
 
     def segcost(k: int, lo: int, hi: int) -> float:

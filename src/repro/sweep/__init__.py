@@ -1,0 +1,25 @@
+"""Scenario-sweep engine: declarative scenario specs, named suites, a cached
+multiprocessing runner, and structured artifacts + comparison reports.
+
+The paper's evaluation (Sec. VI, Figs. 4-11) is a grid of scenarios —
+topology x model profile x request mode x cut count K x solver.  This package
+turns each grid point into a serializable :class:`ScenarioSpec`, groups them
+into named suites (``repro.sweep.suites.SUITES``), executes them through
+:class:`SweepRunner` (process fan-out, shared ``EvalCache`` / Dijkstra-frontier
+tables, on-disk result cache) and emits JSON/CSV artifacts with a BCD-vs-optimal
+comparison and Pareto report.
+
+CLI:  ``PYTHONPATH=src python -m repro.sweep --suite nsfnet_paper --quick``
+"""
+from .report import comparison_report, format_report
+from .runner import ScenarioResult, SweepRunner, run_scenario, verify_result
+from .spec import (SUITE_SCHEMA_VERSION, ScenarioSpec, apply_faults,
+                   build_profile, build_topology, candidate_sets)
+from .suites import SUITES
+
+__all__ = [
+    "SUITE_SCHEMA_VERSION", "ScenarioSpec", "ScenarioResult", "SweepRunner",
+    "SUITES", "apply_faults", "build_profile", "build_topology",
+    "candidate_sets", "comparison_report", "format_report", "run_scenario",
+    "verify_result",
+]

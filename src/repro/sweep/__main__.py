@@ -1,0 +1,78 @@
+"""CLI for the scenario-sweep engine.
+
+    PYTHONPATH=src python -m repro.sweep --suite nsfnet_paper --quick
+    PYTHONPATH=src python -m repro.sweep --list
+    PYTHONPATH=src python -m repro.sweep --suite nsfnet_faults --workers 2 \
+        --out sweep_out --cache-dir sweep_out/.cache
+
+Artifacts land in ``--out`` (default ``sweep_out/``): ``<suite>.json`` with
+per-scenario latency breakdowns + the comparison/Pareto report, and a flat
+``<suite>.csv``.  With a cache dir (default ``<out>/.cache``) a re-run of the
+same suite is served from disk and reports its cache-hit count.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .artifacts import write_artifacts
+from .report import comparison_report, format_report
+from .runner import SweepRunner
+from .suites import SUITES
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.sweep",
+                                 description="scenario-sweep engine")
+    ap.add_argument("--suite", nargs="*", default=None,
+                    help=f"suites to run (default: nsfnet_paper); have {list(SUITES)}")
+    ap.add_argument("--quick", action="store_true", help="reduced grids (CI tier)")
+    ap.add_argument("--out", default="sweep_out", help="artifact directory")
+    ap.add_argument("--cache-dir", default=None,
+                    help="result cache dir (default <out>/.cache)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the on-disk result cache")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="worker processes (0/1 = in-process serial)")
+    ap.add_argument("--list", action="store_true", help="list suites and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, fn in SUITES.items():
+            n_quick, n_full = len(fn(quick=True)), len(fn(quick=False))
+            print(f"{name:<16} quick={n_quick:>4} scenarios, full={n_full:>5}")
+        return 0
+
+    names = args.suite or ["nsfnet_paper"]
+    unknown = [n for n in names if n not in SUITES]
+    if unknown:
+        print(f"unknown suite(s) {unknown}; have {list(SUITES)}", file=sys.stderr)
+        return 2
+
+    cache_dir = None if args.no_cache else (args.cache_dir or f"{args.out}/.cache")
+    runner = SweepRunner(cache_dir=cache_dir, workers=args.workers)
+    rc = 0
+    for name in names:
+        specs = SUITES[name](quick=args.quick)
+        print(f"# suite {name}: {len(specs)} scenarios "
+              f"(quick={args.quick}, workers={args.workers})", file=sys.stderr)
+        t0 = time.perf_counter()
+        results = runner.run(specs)
+        wall = time.perf_counter() - t0
+        st = runner.last_stats
+        paths = write_artifacts(args.out, name, results,
+                                meta={"quick": args.quick, "stats": st})
+        n_feas = sum(r.feasible for r in results)
+        print(f"# {name}: {n_feas}/{len(results)} feasible, "
+              f"{st['n_cache_hits']} cache hits, {st['n_solved']} solved, "
+              f"{wall:.2f}s", file=sys.stderr)
+        print(format_report(comparison_report(results)))
+        print(f"# artifacts: {paths['json']} {paths['csv']}", file=sys.stderr)
+        if n_feas == 0:
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

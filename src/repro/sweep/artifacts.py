@@ -1,0 +1,78 @@
+"""Structured sweep artifacts: one JSON document per suite run plus a flat CSV.
+
+The JSON artifact is self-contained — every record embeds its full
+ScenarioSpec, so ``load_artifact`` can rebuild and re-verify any plan without
+the code that generated it (see ``runner.verify_result``).
+"""
+from __future__ import annotations
+
+import csv
+import json
+import time
+from pathlib import Path
+
+from .report import comparison_report
+from .runner import ScenarioResult
+from .spec import SUITE_SCHEMA_VERSION
+
+CSV_FIELDS = [
+    "scenario_id", "suite", "figure", "cell", "topology", "profile", "mode",
+    "K", "batch_size", "solver", "candidate_seed", "feasible", "latency_s",
+    "computation_s", "transmission_s", "propagation_s", "wall_time_s",
+    "iterations", "from_cache",
+]
+
+
+def write_artifacts(out_dir: str | Path, suite_name: str,
+                    results: list[ScenarioResult],
+                    meta: dict | None = None) -> dict[str, Path]:
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    report = comparison_report(results)
+    doc = {
+        "schema_version": SUITE_SCHEMA_VERSION,
+        "suite": suite_name,
+        "created_unix": time.time(),
+        "meta": meta or {},
+        "report": report,
+        "results": [r.to_dict() for r in results],
+    }
+    json_path = out / f"{suite_name}.json"
+    json_path.write_text(json.dumps(doc, indent=1))
+
+    csv_path = out / f"{suite_name}.csv"
+    with csv_path.open("w", newline="") as fh:
+        w = csv.DictWriter(fh, fieldnames=CSV_FIELDS)
+        w.writeheader()
+        for r in results:
+            s = r.spec
+            w.writerow({
+                "scenario_id": s.scenario_id(),
+                "suite": s.tags.get("suite", suite_name),
+                "figure": s.tags.get("figure", ""),
+                "cell": s.tags.get("cell", ""),
+                "topology": s.topology,
+                "profile": s.profile,
+                "mode": s.mode,
+                "K": s.K,
+                "batch_size": s.batch_size,
+                "solver": s.solver,
+                "candidate_seed": s.candidate_seed,
+                "feasible": r.feasible,
+                "latency_s": r.latency_s,
+                "computation_s": r.computation_s,
+                "transmission_s": r.transmission_s,
+                "propagation_s": r.propagation_s,
+                "wall_time_s": r.wall_time_s,
+                "iterations": r.iterations,
+                "from_cache": r.from_cache,
+            })
+    return {"json": json_path, "csv": csv_path}
+
+
+def load_artifact(path: str | Path) -> tuple[dict, list[ScenarioResult]]:
+    """Read a suite JSON artifact back into (meta document, results)."""
+    doc = json.loads(Path(path).read_text())
+    results = [ScenarioResult.from_dict(d) for d in doc["results"]]
+    meta = {k: v for k, v in doc.items() if k != "results"}
+    return meta, results

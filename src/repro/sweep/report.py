@@ -1,0 +1,109 @@
+"""Comparison / Pareto reporting over sweep results.
+
+Scenarios sharing a :meth:`ScenarioSpec.group_key` are one problem instance
+solved by several schemes; within each group we measure every scheme against
+the best optimal-class solver present (``exact`` or ``ilp``, else the group's
+best latency): optimality gap in % and wall-time speedup.  A scheme is on the
+group's Pareto front if no other scheme is at least as good on both latency
+and solver wall time and strictly better on one.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from .runner import ScenarioResult
+
+OPTIMAL_SOLVERS = ("exact", "ilp")
+
+
+def _pareto(points: list[tuple[str, float, float]]) -> set[str]:
+    front = set()
+    for name, lat, wall in points:
+        dominated = any(
+            (l2 <= lat and w2 <= wall) and (l2 < lat or w2 < wall)
+            for n2, l2, w2 in points if n2 != name
+        )
+        if not dominated:
+            front.add(name)
+    return front
+
+
+def comparison_report(results: list[ScenarioResult]) -> dict:
+    groups: dict[str, list[ScenarioResult]] = defaultdict(list)
+    for r in results:
+        groups[r.spec.group_key()].append(r)
+
+    per_group = []
+    agg: dict[str, dict] = defaultdict(
+        lambda: {"n": 0, "n_feasible": 0, "gap_pct_sum": 0.0, "gap_pct_max": 0.0,
+                 "n_gap": 0, "speedup_sum": 0.0, "n_speedup": 0,
+                 "pareto_count": 0})
+
+    for key, rs in sorted(groups.items()):
+        feas = [r for r in rs if r.feasible]
+        ref = None
+        for r in feas:
+            if r.spec.solver in OPTIMAL_SOLVERS:
+                if ref is None or r.latency_s < ref.latency_s:
+                    ref = r
+        if ref is None and feas:
+            ref = min(feas, key=lambda r: r.latency_s)
+
+        entry = {"group": rs[0].spec.tags.get("cell", key[:48]),
+                 "tags": rs[0].spec.tags,
+                 "reference_solver": ref.spec.solver if ref else None,
+                 "solvers": {}}
+        points = []
+        for r in rs:
+            a = agg[r.spec.solver]
+            a["n"] += 1
+            row: dict = {"feasible": r.feasible,
+                         "wall_time_s": r.wall_time_s,
+                         "iterations": r.iterations}
+            if r.feasible:
+                a["n_feasible"] += 1
+                row["latency_s"] = r.latency_s
+                if ref is not None and ref.latency_s > 0:
+                    gap = (r.latency_s - ref.latency_s) / ref.latency_s * 100.0
+                    row["gap_pct"] = gap
+                    a["gap_pct_sum"] += gap
+                    a["gap_pct_max"] = max(a["gap_pct_max"], gap)
+                    a["n_gap"] += 1
+                if ref is not None and r.wall_time_s > 0:
+                    row["speedup_vs_ref"] = ref.wall_time_s / r.wall_time_s
+                    a["speedup_sum"] += row["speedup_vs_ref"]
+                    a["n_speedup"] += 1
+                points.append((r.spec.solver, r.latency_s, r.wall_time_s))
+            entry["solvers"][r.spec.solver] = row
+        front = _pareto(points)
+        entry["pareto_front"] = sorted(front)
+        for s in front:
+            agg[s]["pareto_count"] += 1
+        per_group.append(entry)
+
+    summary = {}
+    for solver, a in sorted(agg.items()):
+        summary[solver] = {
+            "n": a["n"],
+            "n_feasible": a["n_feasible"],
+            "mean_gap_pct": a["gap_pct_sum"] / a["n_gap"] if a["n_gap"] else None,
+            "max_gap_pct": a["gap_pct_max"] if a["n_gap"] else None,
+            "mean_speedup_vs_ref": (a["speedup_sum"] / a["n_speedup"]
+                                    if a["n_speedup"] else None),
+            "pareto_count": a["pareto_count"],
+        }
+    return {"n_groups": len(per_group), "summary": summary, "groups": per_group}
+
+
+def format_report(report: dict) -> str:
+    lines = [f"comparison over {report['n_groups']} scenario groups",
+             f"{'solver':<10} {'feas':>9} {'mean gap%':>10} {'max gap%':>10} "
+             f"{'speedup':>9} {'pareto':>7}"]
+    for solver, s in report["summary"].items():
+        gap = "-" if s["mean_gap_pct"] is None else f"{s['mean_gap_pct']:.2f}"
+        mgap = "-" if s["max_gap_pct"] is None else f"{s['max_gap_pct']:.2f}"
+        spd = ("-" if s["mean_speedup_vs_ref"] is None
+               else f"{s['mean_speedup_vs_ref']:.1f}x")
+        lines.append(f"{solver:<10} {s['n_feasible']:>4}/{s['n']:<4} {gap:>10} "
+                     f"{mgap:>10} {spd:>9} {s['pareto_count']:>7}")
+    return "\n".join(lines)

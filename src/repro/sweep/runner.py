@@ -1,0 +1,240 @@
+"""SweepRunner: execute ScenarioSpecs with shared caches, process fan-out, and
+an on-disk result cache.
+
+Per-process context caches (module-level, so they survive across scenarios
+handled by the same worker):
+
+  * networks keyed by the spec's topology signature — so the cached Dijkstra
+    frontiers on ``PhysicalNetwork`` accumulate across grid points;
+  * model profiles keyed by profile signature — so the prefix-sum tables are
+    built once;
+  * ``EvalCache`` keyed by (topology, profile, batch, mode) — so per-(node,
+    segment) compute/fit tables are shared by every scheme and candidate seed
+    of the same problem cell.
+
+The on-disk cache (``<cache_dir>/<spec_hash>.json``) memoizes finished
+scenario results, making warm re-runs of a suite near-instant.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+
+from repro.core import (EvalCache, LatencyBreakdown, Plan, PlanEvaluator,
+                        SolveResult, bcd_solve, comm_ms_solve, comp_ms_solve,
+                        exact_solve, ilp_solve)
+
+from .spec import ScenarioSpec
+
+SOLVERS = {
+    "ilp": ilp_solve,
+    "exact": exact_solve,
+    "bcd": bcd_solve,
+    "comp-ms": comp_ms_solve,
+    "comm-ms": comm_ms_solve,
+}
+
+
+@dataclass
+class ScenarioResult:
+    """Structured outcome of one grid point (JSON round-trippable)."""
+
+    spec: ScenarioSpec
+    feasible: bool
+    latency_s: float | None = None
+    computation_s: float | None = None
+    transmission_s: float | None = None
+    propagation_s: float | None = None
+    wall_time_s: float = 0.0
+    iterations: int = 0
+    segments: list | None = None
+    placement: list | None = None
+    paths: list | None = None
+    tail_path: list | None = None
+    from_cache: bool = False
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["spec"] = self.spec.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScenarioResult":
+        d = dict(d)
+        d["spec"] = ScenarioSpec.from_dict(d["spec"])
+        return cls(**d)
+
+    def plan(self) -> Plan | None:
+        if not self.feasible:
+            return None
+        return Plan(segments=[tuple(s) for s in self.segments],
+                    placement=list(self.placement),
+                    paths=[list(p) for p in self.paths],
+                    tail_path=list(self.tail_path or []))
+
+
+# ------------------------------------------------------- per-process context
+_NETS: dict = {}
+_PROFILES: dict = {}
+_EVAL_CACHES: dict = {}
+
+
+def _context(spec: ScenarioSpec):
+    topo_key = json.dumps([spec.topology, spec.topology_kwargs, spec.drop_nodes,
+                           spec.drop_links], sort_keys=True)
+    prof_key = json.dumps([spec.profile, spec.profile_kwargs], sort_keys=True)
+    net = _NETS.get(topo_key)
+    if net is None:
+        net = _NETS[topo_key] = spec.build_network()
+    profile = _PROFILES.get(prof_key)
+    if profile is None:
+        profile = _PROFILES[prof_key] = spec.build_profile()
+    ev_key = (topo_key, prof_key, spec.batch_size, spec.mode)
+    cache = _EVAL_CACHES.get(ev_key)
+    if cache is None:
+        cache = _EVAL_CACHES[ev_key] = EvalCache()
+    return net, profile, cache
+
+
+def clear_context() -> None:
+    """Drop the per-process memo tables (tests use this to force cold runs)."""
+    _NETS.clear()
+    _PROFILES.clear()
+    _EVAL_CACHES.clear()
+
+
+def run_scenario(spec: ScenarioSpec, use_context_cache: bool = True) -> ScenarioResult:
+    """Solve one grid point in-process."""
+    if use_context_cache:
+        net, profile, cache = _context(spec)
+    else:
+        net, profile, cache = spec.build_network(), spec.build_profile(), None
+    request = spec.request()
+    candidates = spec.build_candidates(net)
+    solver = SOLVERS[spec.solver]
+    res: SolveResult = solver(net, profile, request, spec.K, candidates,
+                              cache=cache, **spec.solver_kwargs)
+    if not res.feasible:
+        return ScenarioResult(spec, False, wall_time_s=res.wall_time_s,
+                              iterations=res.iterations)
+    lb: LatencyBreakdown = res.latency
+    p = res.plan
+    return ScenarioResult(
+        spec, True,
+        latency_s=lb.total_s,
+        computation_s=lb.computation_s,
+        transmission_s=lb.transmission_s,
+        propagation_s=lb.propagation_s,
+        wall_time_s=res.wall_time_s,
+        iterations=res.iterations,
+        segments=[list(s) for s in p.segments],
+        placement=list(p.placement),
+        paths=[list(path) for path in p.paths],
+        tail_path=list(p.tail_path),
+    )
+
+
+def verify_result(result: ScenarioResult, atol: float = 1e-9) -> bool:
+    """Re-evaluate a (possibly reloaded) result's plan against the freshly built
+    scenario and confirm the recorded latency — the artifact round-trip check."""
+    if not result.feasible:
+        return True
+    spec = result.spec
+    net, profile = spec.build_network(), spec.build_profile()
+    ev = PlanEvaluator(net, profile, spec.request())
+    plan = result.plan()
+    ev.check(plan)
+    return abs(ev.latency_s(plan) - result.latency_s) <= atol
+
+
+def _worker(args: tuple[dict, bool]) -> dict:
+    spec_dict, use_context_cache = args
+    return run_scenario(ScenarioSpec.from_dict(spec_dict),
+                        use_context_cache=use_context_cache).to_dict()
+
+
+class SweepRunner:
+    """Executes a list of ScenarioSpecs with optional process fan-out and an
+    on-disk result cache keyed by spec content hash.
+
+    ``use_context_cache=False`` rebuilds the network/profile and uses a fresh
+    EvalCache for every scenario — required when solver *wall time* is the
+    measurement (warm shared caches would flatter whichever scheme runs last).
+    """
+
+    def __init__(self, cache_dir: str | Path | None = None,
+                 workers: int | None = 0, use_disk_cache: bool = True,
+                 use_context_cache: bool = True):
+        self.cache_dir = Path(cache_dir) if cache_dir else None
+        self.workers = workers if workers is not None else (os.cpu_count() or 1)
+        self.use_disk_cache = use_disk_cache and self.cache_dir is not None
+        self.use_context_cache = use_context_cache
+        self.last_stats: dict = {}
+
+    # ------------------------------------------------------------- disk cache
+    def _cache_path(self, spec: ScenarioSpec) -> Path:
+        return self.cache_dir / f"{spec.spec_hash()}.json"
+
+    def _load_cached(self, spec: ScenarioSpec) -> ScenarioResult | None:
+        path = self._cache_path(spec)
+        if not path.exists():
+            return None
+        try:
+            res = ScenarioResult.from_dict(json.loads(path.read_text()))
+        except (json.JSONDecodeError, KeyError, TypeError):
+            return None
+        # tolerate label/tag edits: only the solve-relevant key must match
+        if res.spec.key() != spec.key():
+            return None
+        res.spec = spec
+        res.from_cache = True
+        return res
+
+    def _store(self, result: ScenarioResult) -> None:
+        self.cache_dir.mkdir(parents=True, exist_ok=True)
+        self._cache_path(result.spec).write_text(json.dumps(result.to_dict()))
+
+    # -------------------------------------------------------------------- run
+    def run(self, specs: list[ScenarioSpec]) -> list[ScenarioResult]:
+        t0 = time.perf_counter()
+        results: list[ScenarioResult | None] = [None] * len(specs)
+        misses: list[int] = []
+        for idx, spec in enumerate(specs):
+            if self.use_disk_cache:
+                hit = self._load_cached(spec)
+                if hit is not None:
+                    results[idx] = hit
+                    continue
+            misses.append(idx)
+
+        if misses and self.workers >= 2 and len(misses) > 1:
+            with ProcessPoolExecutor(max_workers=self.workers) as pool:
+                solved = pool.map(
+                    _worker,
+                    [(specs[i].to_dict(), self.use_context_cache) for i in misses],
+                    chunksize=max(1, len(misses) // (4 * self.workers)))
+                for idx, rd in zip(misses, solved):
+                    res = ScenarioResult.from_dict(rd)
+                    res.spec = specs[idx]  # keep identity incl. name/tags
+                    results[idx] = res
+        else:
+            for idx in misses:
+                results[idx] = run_scenario(
+                    specs[idx], use_context_cache=self.use_context_cache)
+
+        if self.use_disk_cache:
+            for idx in misses:
+                self._store(results[idx])
+
+        out = [r for r in results if r is not None]
+        self.last_stats = {
+            "n_scenarios": len(specs),
+            "n_cache_hits": len(specs) - len(misses),
+            "n_solved": len(misses),
+            "wall_time_s": time.perf_counter() - t0,
+        }
+        return out

@@ -1,0 +1,202 @@
+"""Declarative scenario schema for the sweep engine.
+
+A :class:`ScenarioSpec` names everything needed to reproduce one evaluation
+grid point — topology factory + kwargs (with optional fault injection), model
+profile, ``ServiceChainRequest`` parameters, candidate-set policy, cut count K,
+and solver — as plain JSON-able data.  Specs are hashable (content hash) so
+results can be memoized on disk and shipped to worker processes.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import random
+from dataclasses import asdict, dataclass, field
+
+from repro.core import (
+    IF,
+    TR,
+    LinkSpec,
+    ModelProfile,
+    PhysicalNetwork,
+    ServiceChainRequest,
+    nsfnet,
+    random_network,
+    resnet101_profile,
+    tpu_pod_topology,
+)
+
+SUITE_SCHEMA_VERSION = 1
+
+SOLVER_NAMES = ("exact", "ilp", "bcd", "comp-ms", "comm-ms")
+
+# ------------------------------------------------------------------ topologies
+TOPOLOGIES = {
+    "nsfnet": nsfnet,
+    "random": random_network,
+    "tpu_pod": tpu_pod_topology,
+}
+
+
+def apply_faults(
+    net: PhysicalNetwork,
+    drop_nodes: list[str] | tuple[str, ...] = (),
+    drop_links: list[tuple[str, str]] | tuple = (),
+) -> PhysicalNetwork:
+    """Return a copy of `net` with the given nodes / undirected links removed
+    (fault-injected scenario variants; both directions of each link go down)."""
+    dead_nodes = set(drop_nodes)
+    dead_links = {frozenset(pair) for pair in drop_links}
+    out = PhysicalNetwork()
+    for name, spec in net.nodes.items():
+        if name not in dead_nodes:
+            out.add_node(spec)
+    for (u, v), spec in net.links.items():
+        if u in dead_nodes or v in dead_nodes:
+            continue
+        if frozenset((u, v)) in dead_links:
+            continue
+        out.add_link(u, v, LinkSpec(spec.bw_fw, spec.bw_bw,
+                                    spec.delay_fw, spec.delay_bw))
+    return out
+
+
+def build_topology(name: str, kwargs: dict | None = None,
+                   drop_nodes: tuple = (), drop_links: tuple = ()) -> PhysicalNetwork:
+    try:
+        factory = TOPOLOGIES[name]
+    except KeyError:
+        raise KeyError(f"unknown topology {name!r}; have {sorted(TOPOLOGIES)}")
+    net = factory(**(kwargs or {}))
+    if drop_nodes or drop_links:
+        net = apply_faults(net, drop_nodes, drop_links)
+    return net
+
+
+# -------------------------------------------------------------------- profiles
+def _group_profile(arch: str, seq_len: int = 2048, mode: str = "train",
+                   cache_len: int = 0) -> ModelProfile:
+    # Lazy import: repro.msl pulls in the jax model stack, which sweep workers
+    # only need for TPU-pod scenarios.
+    from repro.configs import ARCHS
+    from repro.msl import group_profile
+
+    return group_profile(ARCHS[arch], seq_len=seq_len, mode=mode,
+                         cache_len=cache_len)
+
+
+PROFILES = {
+    "resnet101": resnet101_profile,
+    "group": _group_profile,  # kwargs: arch, seq_len, mode
+}
+
+
+def build_profile(name: str, kwargs: dict | None = None) -> ModelProfile:
+    try:
+        factory = PROFILES[name]
+    except KeyError:
+        raise KeyError(f"unknown profile {name!r}; have {sorted(PROFILES)}")
+    return factory(**(kwargs or {}))
+
+
+# --------------------------------------------------------------- candidate sets
+def candidate_sets(K: int, seed: int, nodes: list[str],
+                   source: str, dest: str, per_stage: int = 2) -> list[list[str]]:
+    """Paper Sec. VI-A2 candidate policy: first/last stage pinned to s/d; each
+    intermediate sub-model gets `per_stage` randomly, distinctly selected
+    candidate nodes."""
+    rng = random.Random(seed * 1000 + K)
+    mids = [n for n in nodes if n not in (source, dest)]
+    picked = rng.sample(mids, per_stage * (K - 2)) if K > 2 else []
+    cands = [[source]]
+    for k in range(K - 2):
+        cands.append(picked[per_stage * k : per_stage * (k + 1)])
+    cands.append([dest])
+    return cands
+
+
+# ----------------------------------------------------------------------- spec
+@dataclass
+class ScenarioSpec:
+    """One evaluation grid point, fully determined by plain data."""
+
+    topology: str = "nsfnet"
+    topology_kwargs: dict = field(default_factory=dict)
+    drop_nodes: list = field(default_factory=list)
+    drop_links: list = field(default_factory=list)  # undirected [u, v] pairs
+    profile: str = "resnet101"
+    profile_kwargs: dict = field(default_factory=dict)
+    source: str = "v4"
+    destination: str = "v13"
+    batch_size: int = 1
+    mode: str = IF
+    K: int = 3
+    solver: str = "bcd"
+    solver_kwargs: dict = field(default_factory=dict)
+    candidates: list | None = None  # pinned V^k sets; None -> seeded policy
+    candidate_seed: int = 0
+    candidates_per_stage: int = 2
+    name: str = ""  # optional human label; not part of the content hash
+    tags: dict = field(default_factory=dict)  # free-form grouping metadata
+
+    def __post_init__(self) -> None:
+        if self.mode not in (IF, TR):
+            raise ValueError(f"mode must be IF|TR, got {self.mode!r}")
+        if self.solver not in SOLVER_NAMES:
+            raise ValueError(f"solver must be one of {SOLVER_NAMES}")
+        self.drop_links = [list(p) for p in self.drop_links]
+        if self.candidates is not None:
+            self.candidates = [list(c) for c in self.candidates]
+
+    # ----------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ScenarioSpec":
+        return cls(**d)
+
+    def key(self) -> str:
+        """Canonical JSON of the solve-relevant fields (name/tags excluded)."""
+        d = self.to_dict()
+        d.pop("name", None)
+        d.pop("tags", None)
+        return json.dumps(d, sort_keys=True, separators=(",", ":"))
+
+    def spec_hash(self) -> str:
+        return hashlib.sha256(self.key().encode()).hexdigest()[:16]
+
+    def scenario_id(self) -> str:
+        return self.name or (
+            f"{self.topology}_{self.profile}_{self.mode}_K{self.K}"
+            f"_b{self.batch_size}_{self.solver}_s{self.candidate_seed}"
+            f"_{self.spec_hash()[:6]}"
+        )
+
+    def group_key(self) -> str:
+        """Canonical key of everything *except* the solver — scenarios sharing a
+        group key are the same problem instance solved by different schemes."""
+        d = self.to_dict()
+        for f in ("name", "tags", "solver", "solver_kwargs"):
+            d.pop(f, None)
+        return json.dumps(d, sort_keys=True, separators=(",", ":"))
+
+    # ------------------------------------------------------------ construction
+    def build_network(self) -> PhysicalNetwork:
+        return build_topology(self.topology, self.topology_kwargs,
+                              tuple(self.drop_nodes),
+                              tuple(tuple(p) for p in self.drop_links))
+
+    def build_profile(self) -> ModelProfile:
+        return build_profile(self.profile, self.profile_kwargs)
+
+    def build_candidates(self, net: PhysicalNetwork) -> list[list[str]]:
+        if self.candidates is not None:
+            return [list(c) for c in self.candidates]
+        return candidate_sets(self.K, self.candidate_seed, sorted(net.nodes),
+                              self.source, self.destination,
+                              self.candidates_per_stage)
+
+    def request(self) -> ServiceChainRequest:
+        return ServiceChainRequest(self.profile, self.source, self.destination,
+                                   self.batch_size, self.mode)

@@ -1,0 +1,163 @@
+"""Named scenario suites — the registry every benchmark and the CLI draw from.
+
+Each suite function returns ``list[ScenarioSpec]`` and takes ``quick`` (reduced
+grids for CI) plus optional keyword filters so the benchmark drivers can slice
+a suite (e.g. one mode of the NSFNET paper grid).
+"""
+from __future__ import annotations
+
+from repro.core import IF, TR
+
+from .spec import ScenarioSpec, candidate_sets
+
+# The paper's NSFNET node ordering (v1..v14) — candidate sampling is seeded, so
+# the ordering is part of the reproducible scenario definition.
+NSFNET_NODES = [f"v{i}" for i in range(1, 15)]
+SOURCE, DEST = "v4", "v13"
+
+# `exact` is the ILP-equivalent joint DP (tests prove equality with the HiGHS
+# MILP); the latency grids use it so the full paper sweep stays fast.  `ilp`
+# is reserved for the exec-time suites, where its wall time is the measurement.
+LATENCY_SCHEMES = ("exact", "bcd", "comp-ms", "comm-ms")
+EXEC_SCHEMES = ("ilp", "bcd", "comp-ms", "comm-ms")
+
+
+def _nsfnet_spec(mode: str, K: int, b: int, solver: str, seed: int,
+                 tags: dict, **overrides) -> ScenarioSpec:
+    cands = candidate_sets(K, seed, NSFNET_NODES, SOURCE, DEST)
+    return ScenarioSpec(
+        topology="nsfnet", topology_kwargs={"source": SOURCE},
+        profile="resnet101", source=SOURCE, destination=DEST,
+        batch_size=b, mode=mode, K=K, solver=solver,
+        candidates=cands, candidate_seed=seed,
+        tags={"suite": "nsfnet_paper", "seed": seed, **tags},
+        **overrides,
+    )
+
+
+def nsfnet_paper(quick: bool = False, modes: tuple[str, ...] = (IF, TR),
+                 seeds: int = 10,
+                 schemes: tuple[str, ...] = LATENCY_SCHEMES) -> list[ScenarioSpec]:
+    """Figs. 4 & 5 grid: latency vs (K, b) per scheme, averaged over seeds."""
+    ks = [2, 3, 5] if quick else list(range(2, 8))
+    bs = [2, 128] if quick else [2**i for i in range(0, 9)]
+    n_seeds = 3 if quick else seeds
+    specs = []
+    for mode in modes:
+        fig = "fig4" if mode == IF else "fig5"
+        for K in ks:
+            for b in bs:
+                for solver in schemes:
+                    for seed in range(n_seeds):
+                        specs.append(_nsfnet_spec(
+                            mode, K, b, solver, seed,
+                            {"figure": fig, "cell": f"K{K}_b{b}"}))
+    return specs
+
+
+def exec_time_k(quick: bool = False,
+                ilp_time_limit_s: float = 120.0) -> list[ScenarioSpec]:
+    """Fig. 10: solver wall time vs chain length K (training, b=128)."""
+    ks = [2, 4] if quick else list(range(2, 8))
+    specs = []
+    for K in ks:
+        n_seeds = 1 if (quick or K >= 6) else 3  # big-K MILPs are slow (1 core)
+        for solver in EXEC_SCHEMES:
+            for seed in range(n_seeds):
+                kw = {"time_limit_s": ilp_time_limit_s} if solver == "ilp" else {}
+                specs.append(_nsfnet_spec(
+                    TR, K, 128, solver, seed,
+                    {"suite": "exec_time_k", "figure": "fig10", "cell": f"K{K}"},
+                    solver_kwargs=kw))
+    return specs
+
+
+def random_scaling(quick: bool = False,
+                   ilp_time_limit_s: float = 120.0) -> list[ScenarioSpec]:
+    """Fig. 11 scaling ladder: random G(V, p=0.2) networks, K=4, training."""
+    vs = [10, 20] if quick else [10, 20, 30, 40, 50]
+    specs = []
+    for V in vs:
+        nodes = sorted(f"v{i}" for i in range(1, V + 1))
+        dest = nodes[-1]
+        for solver in EXEC_SCHEMES:
+            if solver == "ilp" and V >= 30 and quick:
+                continue
+            cands = candidate_sets(4, 0, nodes, "v1", dest)
+            kw = {"time_limit_s": ilp_time_limit_s} if solver == "ilp" else {}
+            specs.append(ScenarioSpec(
+                topology="random",
+                topology_kwargs={"n_nodes": V, "p": 0.2, "seed": 7,
+                                 "source": "v1"},
+                profile="resnet101", source="v1", destination=dest,
+                batch_size=128, mode=TR, K=4, solver=solver,
+                solver_kwargs=kw, candidates=cands,
+                tags={"suite": "random_scaling", "figure": "fig11",
+                      "cell": f"V{V}"}))
+    return specs
+
+
+def tpu_pod(quick: bool = False) -> list[ScenarioSpec]:
+    """TPU-pod graphs: pattern-group profiles planned over ICI/DCN topologies."""
+    grids = ([("qwen2-1.5b", 8, 16, 1)] if quick
+             else [("qwen2-1.5b", 8, 16, 1), ("qwen2-1.5b", 16, 16, 2),
+                   ("qwen3-14b", 8, 32, 1)])
+    ks = [2, 4]
+    specs = []
+    for arch, n_groups, chips, n_pods in grids:
+        nodes = sorted(f"p{p}g{g}" for p in range(n_pods) for g in range(n_groups))
+        for K in ks:
+            for mode, b in ((TR, 8), (IF, 32)):
+                for solver in ("exact", "bcd"):
+                    specs.append(ScenarioSpec(
+                        topology="tpu_pod",
+                        topology_kwargs={"n_groups": n_groups,
+                                         "chips_per_group": chips,
+                                         "n_pods": n_pods},
+                        profile="group",
+                        profile_kwargs={"arch": arch, "seq_len": 2048,
+                                        "mode": "train" if mode == TR else "prefill"},
+                        source=nodes[0], destination=nodes[-1],
+                        batch_size=b, mode=mode, K=K, solver=solver,
+                        tags={"suite": "tpu_pod", "arch": arch,
+                              "cell": f"{arch}_g{n_groups}x{chips}_K{K}_{mode}"}))
+    return specs
+
+
+def nsfnet_faults(quick: bool = False) -> list[ScenarioSpec]:
+    """Fault-injected NSFNET variants: kill a transit node or trunk link and
+    compare how BCD re-plans against the optimum on the degraded fabric."""
+    faults = [
+        ("baseline", [], []),
+        ("node_v7_down", ["v7"], []),
+        ("node_v9_down", ["v9"], []),
+        ("link_v4_v5_down", [], [["v4", "v5"]]),
+        ("links_v6_down", [], [["v6", "v10"], ["v6", "v13"]]),
+    ]
+    if quick:
+        faults = faults[:3]
+    specs = []
+    for fname, drop_nodes, drop_links in faults:
+        alive = [n for n in NSFNET_NODES if n not in drop_nodes]
+        for seed in range(1 if quick else 3):
+            cands = candidate_sets(3, seed, alive, SOURCE, DEST)
+            for solver in ("exact", "bcd"):
+                for mode, b in ((IF, 2), (TR, 128)):
+                    specs.append(ScenarioSpec(
+                        topology="nsfnet", topology_kwargs={"source": SOURCE},
+                        drop_nodes=list(drop_nodes), drop_links=drop_links,
+                        profile="resnet101", source=SOURCE, destination=DEST,
+                        batch_size=b, mode=mode, K=3, solver=solver,
+                        candidates=cands, candidate_seed=seed,
+                        tags={"suite": "nsfnet_faults", "fault": fname,
+                              "cell": f"{fname}_{mode}_b{b}", "seed": seed}))
+    return specs
+
+
+SUITES = {
+    "nsfnet_paper": nsfnet_paper,
+    "exec_time_k": exec_time_k,
+    "random_scaling": random_scaling,
+    "tpu_pod": tpu_pod,
+    "nsfnet_faults": nsfnet_faults,
+}

@@ -1,4 +1,13 @@
-"""Property-based tests (hypothesis) for the planner's invariants."""
+"""Property-based tests (hypothesis) for the planner's invariants.
+
+`hypothesis` is an optional dev dependency (see requirements-dev.txt); the
+whole module is skipped when it is not installed so `pytest -x -q` never dies
+at collection.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 
