@@ -1,14 +1,24 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test sweep-quick bench-quick clean
+.PHONY: verify verify-fast test test-fast sweep-quick bench-quick clean
 
 ## verify: tier-1 tests + one quick end-to-end sweep (the CI gate)
 verify: test sweep-quick
 
+## verify-fast: the core dev loop (<40s) — deselects the multi-minute
+## jax-stack tests (pytest -m slow: shard_map subprocess runs, kernel
+## sweeps, dry-runs) and runs one quick serving sweep
+verify-fast: test-fast
+	$(PYTHON) -m repro.sweep --suite nsfnet_multirequest --quick --out sweep_out
+
 ## test: tier-1 test suite (ROADMAP.md)
 test:
 	$(PYTHON) -m pytest -x -q
+
+## test-fast: tier-1 suite without the slow-marked jax-stack tests
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
 
 ## sweep-quick: quick NSFNET paper-grid sweep through the scenario engine
 sweep-quick:

@@ -31,6 +31,9 @@ def _sweep_rows(suite_name: str, quick: bool) -> list:
         derived = ("infeasible" if not r.feasible else
                    f"latency_ms={r.latency_s*1e3:.2f};"
                    f"exec_time_ms={r.wall_time_s*1e3:.2f}")
+        if r.acceptance_ratio is not None:
+            derived += (f";accept={r.acceptance_ratio:.2f}"
+                        f";p95_ms={(r.latency_p95_s or 0.0)*1e3:.2f}")
         rows.append(Row(f"{suite_name}_{cell}_{s.solver}",
                         (r.latency_s or float("nan")) * 1e6, derived))
     return rows
@@ -57,6 +60,10 @@ def _suites():
         "fig10_fig11_exec_time": exec_time.run,
         "sweep_tpu_pod": lambda quick: _sweep_rows("tpu_pod", quick),
         "sweep_faults": lambda quick: _sweep_rows("nsfnet_faults", quick),
+        "serve_multirequest": lambda quick: _sweep_rows("nsfnet_multirequest",
+                                                        quick),
+        "serve_load_scaling": lambda quick: _sweep_rows("random_load_scaling",
+                                                        quick),
     }
     try:
         from . import roofline_table

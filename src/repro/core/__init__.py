@@ -33,17 +33,29 @@ from .plan import (EvalCache, LatencyBreakdown, Plan, PlanEvaluator,
                    ServiceChainRequest)
 from .resnet101_profile import resnet101_profile
 from .segmentation import k_sequence_segmentation
-from .topology import nsfnet, random_network, tpu_pod_topology
+from .topology import candidate_sets, nsfnet, random_network, tpu_pod_topology
+
+# The one solver registry: name -> solve function with the uniform signature
+# (net, profile, request, K, candidates, cache=..., **kwargs).  The sweep and
+# serve layers both resolve solver names here.
+SOLVERS = {
+    "ilp": ilp_solve,
+    "exact": exact_solve,
+    "bcd": bcd_solve,
+    "comp-ms": comp_ms_solve,
+    "comm-ms": comm_ms_solve,
+}
 
 __all__ = [
     "BW", "FW", "IF", "TR",
     "CPU_XEON_6226R", "GPU_RTX_A6000", "ComputeModel",
     "EvalCache", "LayerProfile", "ModelProfile", "LatencyBreakdown",
     "Plan", "PlanEvaluator", "ServiceChainRequest", "SolveResult",
-    "LinkSpec", "NodeSpec", "PhysicalNetwork",
+    "LinkSpec", "NodeSpec", "PhysicalNetwork", "SOLVERS",
     "bcd_solve", "exact_solve", "ilp_solve", "comp_ms_solve", "comm_ms_solve",
     "dfts", "k_sequence_segmentation",
-    "nsfnet", "random_network", "tpu_pod_topology", "resnet101_profile",
+    "candidate_sets", "nsfnet", "random_network", "tpu_pod_topology",
+    "resnet101_profile",
     "even_split", "segments_from_sizes", "cuts_from_segments", "validate_segments",
     "transmission_time_s", "tpu_group_compute_model",
 ]

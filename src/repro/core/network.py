@@ -10,6 +10,8 @@ from __future__ import annotations
 import heapq
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from .costmodel import BW, FW, ComputeModel
 
 
@@ -51,15 +53,27 @@ class PhysicalNetwork:
     # across solver calls and across sweep grid points on the same network.
     _sssp_cache: dict = field(default_factory=dict, init=False, repr=False,
                               compare=False)
+    # Dense [S, V] frontier matrices keyed (sources, fw_bytes, bw_bytes) and the
+    # node -> column index; assembled from _sssp_cache rows for the vectorized
+    # min-plus stage relaxation, invalidated together with it.
+    _frontier_mats: dict = field(default_factory=dict, init=False, repr=False,
+                                 compare=False)
+    _node_idx: dict | None = field(default=None, init=False, repr=False,
+                                   compare=False)
+
+    def _invalidate(self) -> None:
+        self._sssp_cache.clear()
+        self._frontier_mats.clear()
+        self._node_idx = None
 
     def add_node(self, spec: NodeSpec) -> None:
         self.nodes[spec.name] = spec
-        self._sssp_cache.clear()
+        self._invalidate()
 
     def add_link(self, u: str, v: str, spec: LinkSpec) -> None:
         assert u in self.nodes and v in self.nodes
         self.links[(u, v)] = spec
-        self._sssp_cache.clear()
+        self._invalidate()
 
     def add_bidirectional(self, u: str, v: str, spec: LinkSpec) -> None:
         self.add_link(u, v, spec)
@@ -108,10 +122,17 @@ class PhysicalNetwork:
                 continue
             for v, w in adj[u]:
                 nd = d + w
-                if nd < dist[v] - 1e-18:
+                if nd < dist[v]:
                     dist[v] = nd
                     parent[v] = u
                     heapq.heappush(pq, (nd, v))
+                elif nd == dist[v] and parent[v] is not None and u < parent[v]:
+                    # Deterministic equal-cost tie-break: among all optimal
+                    # predecessors take the lexicographically smallest, so the
+                    # parent tree (and every reconstructed path) is independent
+                    # of dict/heap iteration order.  Source nodes keep
+                    # parent=None — they are roots of the tour stage.
+                    parent[v] = u
         return dist, parent
 
     def sssp(
@@ -133,7 +154,38 @@ class PhysicalNetwork:
 
     def clear_routing_cache(self) -> None:
         """Drop cached frontiers (needed only after mutating a LinkSpec in place)."""
-        self._sssp_cache.clear()
+        self._invalidate()
+
+    def node_index(self) -> dict[str, int]:
+        """Stable node -> dense-column index (sorted names; cached)."""
+        if self._node_idx is None:
+            self._node_idx = {n: i for i, n in enumerate(sorted(self.nodes))}
+        return self._node_idx
+
+    def frontier_matrix(
+        self, sources: tuple[str, ...], fw_bytes: float, bw_bytes: float | None
+    ) -> np.ndarray:
+        """Dense [S, V] matrix of cached single-source frontiers.
+
+        Row r is the full Dijkstra distance frontier of ``sources[r]`` for the
+        given smashed-data size, columns ordered by :meth:`node_index`.  The
+        matrix is assembled once per (sources, size) key and shared by every
+        min-plus stage relaxation that composes these frontiers — across BCD
+        iterations, solver calls, and all requests of a serve admission round.
+        Read-only; invalidated with the frontier cache on topology mutation.
+        """
+        key = (sources, fw_bytes, bw_bytes)
+        mat = self._frontier_mats.get(key)
+        if mat is None:
+            idx = self.node_index()
+            mat = np.full((len(sources), len(idx)), float("inf"))
+            for r, s in enumerate(sources):
+                dist, _ = self.sssp(s, fw_bytes, bw_bytes)
+                for n, d in dist.items():
+                    mat[r, idx[n]] = d
+            mat.setflags(write=False)
+            self._frontier_mats[key] = mat
+        return mat
 
     def shortest_path(
         self, src: str, dst: str, fw_bytes: float, bw_bytes: float | None

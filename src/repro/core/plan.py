@@ -69,18 +69,31 @@ class Plan:
 class EvalCache:
     """Memo tables for per-(node, segment) compute time and capacity checks.
 
-    Valid only for a fixed (network, profile, batch_size, mode) — the sweep
-    runner keys shared instances that way so the tables persist across solver
-    calls and across grid points (e.g. all seeds/schemes of one (K, b) cell).
-    Solvers that receive no cache build a private one per call, which still
-    collapses the repeated segment queries inside their own DP loops.
+    Entries are batch-size- and mode-dependent, so both are part of the memo
+    key: a single instance is safe to share across heterogeneous requests of
+    one (network, profile) — the serve layer admits whole fleets against one
+    cache that way, and the sweep runner keys shared instances per problem
+    cell.  Solvers that receive no cache build a private one per call, which
+    still collapses the repeated segment queries inside their own DP loops.
+
+    `fits` additionally depends on node capacities, so a cache must never be
+    shared across *networks* (e.g. residual-capacity views); `comp` depends
+    only on the node compute models and may be (see :meth:`fork_fits`).
     """
 
     __slots__ = ("comp", "fits")
 
     def __init__(self) -> None:
-        self.comp: dict[tuple[str, int, int], float] = {}
-        self.fits: dict[tuple[str, int, int], bool] = {}
+        self.comp: dict[tuple[str, int, int, int, str], float] = {}
+        self.fits: dict[tuple[str, int, int, int, str], bool] = {}
+
+    def fork_fits(self) -> "EvalCache":
+        """A cache sharing this one's compute table but with fresh fit tables —
+        for residual-capacity views of the same network (same compute models,
+        different node capacities)."""
+        out = EvalCache()
+        out.comp = self.comp
+        return out
 
 
 class PlanEvaluator:
@@ -92,11 +105,13 @@ class PlanEvaluator:
         self.profile = profile
         self.request = request
         self.cache = cache if cache is not None else EvalCache()
+        # memo-key suffix: EvalCache entries are batch/mode-dependent
+        self._ck = (request.batch_size, request.mode)
 
     # ------------------------------------------------------------- feasibility
     def segment_fits(self, node: str, lo: int, hi: int) -> bool:
         """Constraints (14) disk and (15) memory for sub-model [lo, hi] at node."""
-        key = (node, lo, hi)
+        key = (node, lo, hi, *self._ck)
         hit = self.cache.fits.get(key)
         if hit is not None:
             return hit
@@ -124,7 +139,7 @@ class PlanEvaluator:
     # ------------------------------------------------------------------ latency
     def segment_comp_s(self, node: str, lo: int, hi: int) -> float:
         """T^comp for sub-model [lo, hi] at node, FW (+BW if training) — Eq. (17)."""
-        key = (node, lo, hi)
+        key = (node, lo, hi, *self._ck)
         hit = self.cache.comp.get(key)
         if hit is not None:
             return hit

@@ -84,6 +84,21 @@ def random_network(
     return net
 
 
+def candidate_sets(K: int, seed: int, nodes: list[str],
+                   source: str, dest: str, per_stage: int = 2) -> list[list[str]]:
+    """Paper Sec. VI-A2 candidate policy: first/last stage pinned to s/d; each
+    intermediate sub-model gets `per_stage` randomly, distinctly selected
+    candidate nodes."""
+    rng = random.Random(seed * 1000 + K)
+    mids = [n for n in nodes if n not in (source, dest)]
+    picked = rng.sample(mids, per_stage * (K - 2)) if K > 2 else []
+    cands = [[source]]
+    for k in range(K - 2):
+        cands.append(picked[per_stage * k : per_stage * (k + 1)])
+    cands.append([dest])
+    return cands
+
+
 # ---------------------------------------------------------------- TPU adaptation
 V5E_HBM_GB = 16.0
 ICI_LINK_BPS = 50e9 * 8  # ~50 GB/s per ICI link

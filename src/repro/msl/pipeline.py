@@ -19,6 +19,7 @@ segment carry a False validity flag and pass the residual through unchanged.
 """
 from __future__ import annotations
 
+import inspect
 from functools import partial
 
 import jax
@@ -36,6 +37,16 @@ try:  # jax >= 0.6 exposes shard_map at top level
     shard_map = jax.shard_map
 except AttributeError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map
+
+# The replication-check kwarg was renamed across JAX versions (0.4.x:
+# `check_rep`, >= 0.6: `check_vma`); detect whichever this JAX accepts so the
+# pipeline disables it on either line (and passes nothing if both are gone).
+_CHECK_KWARGS = (
+    {kw: False}
+    for kw in ("check_vma", "check_rep")
+    if kw in inspect.signature(shard_map).parameters
+)
+SHARD_MAP_CHECK_KWARGS: dict = next(_CHECK_KWARGS, {})
 
 
 def make_pipeline_mesh(n_stages: int, n_data: int) -> Mesh:
@@ -155,7 +166,7 @@ def pipeline_forward(params, batch, cfg: ModelConfig, mesh: Mesh,
                         for g in groups_stacked), P("stage"),
                   P(None, "data")),
         out_specs=(P("stage", "data"), P("stage")),
-        check_vma=False,
+        **SHARD_MAP_CHECK_KWARGS,
     )
     outs, aux = fn(groups_stacked, valid, h_mb)
     # out dim0 is stage-major (K * M); the last stage's block holds the model

@@ -1,0 +1,23 @@
+"""Concurrent multi-request serving planner (`repro.serve`).
+
+The paper plans one service chain R = (s, d, b, mode) in isolation; this
+package admits *fleets* of chains onto one `PhysicalNetwork` with
+residual-capacity accounting (link bandwidth consumed by smashed-data flows,
+node memory/disk by placed sub-models), pluggable admission policies, and
+capacity-aware replanning against the residual network before a request is
+declared blocked.  See docs/serve.md.
+
+CLI:  ``PYTHONPATH=src python -m repro.serve --n-requests 16 --policy fcfs``
+"""
+from .planner import (SOLVERS, ServedRequest, ServeOutcome, ServePlanner,
+                      replay_verify)
+from .policies import POLICIES, POLICY_NAMES
+from .requests import ARRIVALS, BATCH_SPREAD, ServeRequest, generate_fleet
+from .residual import PlanDemand, ResidualState, plan_demand
+
+__all__ = [
+    "ARRIVALS", "BATCH_SPREAD", "POLICIES", "POLICY_NAMES", "SOLVERS",
+    "PlanDemand", "ResidualState", "ServeOutcome", "ServePlanner",
+    "ServeRequest", "ServedRequest", "generate_fleet", "plan_demand",
+    "replay_verify",
+]

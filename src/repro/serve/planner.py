@@ -1,0 +1,245 @@
+"""ServePlanner — concurrent multi-request admission onto one fabric.
+
+Admission round (one call to :meth:`ServePlanner.admit`):
+
+1. **Pre-solve** every distinct request shape once against the *snapshot*
+   (the uncontended base network) with shared caches — one `EvalCache`
+   (batch/mode-keyed) and the network's dense frontier matrices, so the
+   vectorized DFTS relaxations are shared across the whole fleet.
+2. **Order** the fleet with the chosen admission policy (pre-solved solo
+   latencies feed the latency-greedy policy).
+3. **Admit** in order with residual-capacity accounting: a request's snapshot
+   plan is checked against the live residuals; if it no longer fits,
+   capacity-aware **replanning** re-runs the solver against the materialized
+   residual network (reduced link rates and node capacities) before the
+   request is declared blocked.  Accepted plans are committed and their
+   latency is evaluated on the residual fabric they were admitted onto, so
+   per-request latencies reflect contention.
+
+The solvers themselves are the paper's single-chain solvers — their
+formulation has no link capacities, so every plan (snapshot or replanned) is
+re-verified against the residuals before commit.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import (SOLVERS, EvalCache, ModelProfile, PhysicalNetwork,
+                        Plan, PlanEvaluator, SolveResult)
+
+from .policies import POLICIES
+from .requests import ServeRequest
+from .residual import ResidualState
+
+INF = float("inf")
+
+
+@dataclass
+class ServedRequest:
+    """Admission outcome of one request (in admission order)."""
+
+    request: ServeRequest
+    accepted: bool
+    replanned: bool = False
+    latency_s: float | None = None
+    plan: Plan | None = None
+    reason: str = ""  # "" | "no-plan" | "capacity"
+
+    def to_dict(self) -> dict:
+        r = self.request
+        d = {
+            "request_id": r.request_id,
+            "source": r.source,
+            "destination": r.destination,
+            "batch_size": r.batch_size,
+            "mode": r.mode,
+            "K": r.K,
+            "candidates": [list(c) for c in r.candidates],
+            "arrival_s": r.arrival_s,
+            "rate_rps": r.rate_rps,
+            "model_id": r.model_id,
+            "accepted": self.accepted,
+            "replanned": self.replanned,
+            "latency_s": self.latency_s,
+            "reason": self.reason,
+        }
+        if self.plan is not None:
+            d["segments"] = [list(s) for s in self.plan.segments]
+            d["placement"] = list(self.plan.placement)
+            d["paths"] = [list(p) for p in self.plan.paths]
+            d["tail_path"] = list(self.plan.tail_path)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServedRequest":
+        req = ServeRequest(
+            request_id=d["request_id"], source=d["source"],
+            destination=d["destination"], batch_size=d["batch_size"],
+            mode=d["mode"], K=d["K"],
+            candidates=tuple(tuple(c) for c in d["candidates"]),
+            arrival_s=d["arrival_s"], rate_rps=d["rate_rps"],
+            model_id=d["model_id"])
+        plan = None
+        if "segments" in d:
+            plan = Plan(segments=[tuple(s) for s in d["segments"]],
+                        placement=list(d["placement"]),
+                        paths=[list(p) for p in d["paths"]],
+                        tail_path=list(d["tail_path"]))
+        return cls(req, d["accepted"], d["replanned"], d["latency_s"], plan,
+                   d.get("reason", ""))
+
+
+@dataclass
+class ServeOutcome:
+    """Result of one admission round, in admission order."""
+
+    policy: str
+    solver: str
+    served: list[ServedRequest] = field(default_factory=list)
+    wall_time_s: float = 0.0
+    n_presolved: int = 0  # distinct request shapes actually solved in step 1
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.served)
+
+    @property
+    def n_accepted(self) -> int:
+        return sum(s.accepted for s in self.served)
+
+    @property
+    def n_replanned(self) -> int:
+        return sum(s.accepted and s.replanned for s in self.served)
+
+    @property
+    def acceptance_ratio(self) -> float:
+        return self.n_accepted / self.n_requests if self.served else 0.0
+
+    def accepted_latencies(self) -> list[float]:
+        return [s.latency_s for s in self.served
+                if s.accepted and s.latency_s is not None]
+
+    def latency_percentiles(self, qs: tuple[float, ...] = (50, 95, 99)) -> dict:
+        lats = self.accepted_latencies()
+        if not lats:
+            return {f"p{int(q)}": None for q in qs}
+        arr = np.asarray(sorted(lats))
+        return {f"p{int(q)}": float(np.percentile(arr, q)) for q in qs}
+
+    def summary(self) -> dict:
+        pct = self.latency_percentiles()
+        lats = self.accepted_latencies()
+        return {
+            "policy": self.policy,
+            "solver": self.solver,
+            "n_requests": self.n_requests,
+            "n_accepted": self.n_accepted,
+            "n_replanned": self.n_replanned,
+            "acceptance_ratio": self.acceptance_ratio,
+            "latency_mean_s": float(np.mean(lats)) if lats else None,
+            "latency_p50_s": pct["p50"],
+            "latency_p95_s": pct["p95"],
+            "latency_p99_s": pct["p99"],
+            "wall_time_s": self.wall_time_s,
+            "n_presolved": self.n_presolved,
+        }
+
+
+class ServePlanner:
+    """Admits fleets of :class:`ServeRequest` onto one `PhysicalNetwork`."""
+
+    def __init__(self, net: PhysicalNetwork, profile: ModelProfile,
+                 solver: str = "bcd", replan: bool = True,
+                 cache: EvalCache | None = None,
+                 solver_kwargs: dict | None = None):
+        if solver not in SOLVERS:
+            raise ValueError(f"solver must be one of {sorted(SOLVERS)}")
+        self.net = net
+        self.profile = profile
+        self.solver_name = solver
+        self.solver = SOLVERS[solver]
+        self.solver_kwargs = dict(solver_kwargs or {})
+        self.replan = replan
+        # snapshot cache: batch/mode are part of EvalCache keys, so one cache
+        # serves the whole heterogeneous fleet against the base network
+        self.cache = cache if cache is not None else EvalCache()
+
+    def _solve(self, net: PhysicalNetwork, request: ServeRequest,
+               cache: EvalCache | None) -> SolveResult:
+        return self.solver(net, self.profile, request.chain_request(),
+                           request.K, request.candidate_lists(), cache=cache,
+                           **self.solver_kwargs)
+
+    def admit(self, requests: list[ServeRequest],
+              policy: str = "fcfs") -> ServeOutcome:
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {sorted(POLICIES)}")
+        t0 = time.perf_counter()
+
+        # 1. pre-solve each distinct request shape on the snapshot
+        presolved: dict[tuple, SolveResult] = {}
+        estimates: dict[int, float] = {}
+        for r in requests:
+            key = r.solve_key()
+            if key not in presolved:
+                presolved[key] = self._solve(self.net, r, self.cache)
+            estimates[r.request_id] = presolved[key].latency_s
+
+        # 2. policy order
+        order = POLICIES[policy](requests, estimates)
+
+        # 3. admission with residual accounting + capacity-aware replanning
+        state = ResidualState(self.net)
+        served: list[ServedRequest] = []
+        for r in order:
+            plan = presolved[r.solve_key()].plan
+            chosen, replanned = None, False
+            if plan is not None and state.fits(self.profile, r, plan):
+                chosen = plan
+            elif self.replan and plan is not None:
+                # replan only capacity-blocked requests: if even the
+                # uncontended snapshot had no feasible plan, the strictly
+                # tighter residual network cannot have one either
+                res_net = state.materialize(r.mode)
+                res = self._solve(res_net, r, self.cache.fork_fits())
+                if res.plan is not None and state.fits(self.profile, r, res.plan):
+                    chosen, replanned = res.plan, True
+            if chosen is None:
+                served.append(ServedRequest(
+                    r, False, replanned=False, plan=plan,
+                    reason="no-plan" if plan is None else "capacity"))
+                continue
+            # latency on the residual fabric this request was admitted onto
+            # (keep saturated links: a zero-demand tail may cross them)
+            ev = PlanEvaluator(state.materialize(keep_saturated=True),
+                               self.profile, r.chain_request())
+            latency = ev.latency_s(chosen)
+            state.commit(self.profile, r, chosen)
+            served.append(ServedRequest(r, True, replanned=replanned,
+                                        latency_s=latency, plan=chosen))
+        assert state.conservation_ok(self.profile)
+        return ServeOutcome(policy=policy, solver=self.solver_name,
+                            served=served,
+                            wall_time_s=time.perf_counter() - t0,
+                            n_presolved=len(presolved))
+
+
+def replay_verify(net: PhysicalNetwork, profile: ModelProfile,
+                  served: list[ServedRequest]) -> bool:
+    """Re-verify a (possibly reloaded) admission outcome from scratch: replay
+    the accepted plans in admission order against a fresh ResidualState and
+    confirm each fits as it is committed — i.e. accepted chains never
+    oversubscribe a link or node — and that plans are structurally valid."""
+    state = ResidualState(net)
+    for s in served:
+        if not s.accepted:
+            continue
+        assert s.plan is not None
+        PlanEvaluator(net, profile, s.request.chain_request()).check(s.plan)
+        if not state.fits(profile, s.request, s.plan):
+            return False
+        state.commit(profile, s.request, s.plan)
+    return state.conservation_ok(profile)

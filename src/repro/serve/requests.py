@@ -1,0 +1,109 @@
+"""Serve-layer requests: a service chain request with admission metadata.
+
+The paper solves one R = (s, d, b, mode); the serve layer admits a *fleet* of
+them onto one fabric.  A :class:`ServeRequest` adds what admission needs on
+top of the paper's tuple: an id, an arrival time, the chain length K, the
+candidate sets V^k, and a sustained execution rate (chain runs per second)
+that converts the chain's smashed-data sizes into link-bandwidth demand.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+from repro.core import (IF, TR, PhysicalNetwork, ServiceChainRequest,
+                        candidate_sets)
+
+
+@dataclass(frozen=True)
+class ServeRequest:
+    """One admission-layer request: the paper's R plus fleet metadata."""
+
+    request_id: int
+    source: str
+    destination: str
+    batch_size: int
+    mode: str  # IF | TR
+    K: int
+    candidates: tuple[tuple[str, ...], ...]
+    arrival_s: float = 0.0
+    rate_rps: float = 1.0  # sustained chain executions per second
+    model_id: str = "model"
+
+    def __post_init__(self) -> None:
+        assert self.mode in (IF, TR)
+        assert len(self.candidates) == self.K
+        assert self.rate_rps > 0
+
+    def chain_request(self) -> ServiceChainRequest:
+        return ServiceChainRequest(self.model_id, self.source, self.destination,
+                                   self.batch_size, self.mode)
+
+    def candidate_lists(self) -> list[list[str]]:
+        return [list(c) for c in self.candidates]
+
+    def solve_key(self) -> tuple:
+        """Requests sharing this key are the same planning problem — the
+        planner pre-solves each distinct key once per admission round."""
+        return (self.source, self.destination, self.batch_size, self.mode,
+                self.K, self.candidates)
+
+
+# The deterministic batch-size spread applied across a generated fleet (cycled
+# per request id) so batch-aware policies have heterogeneous work to order.
+BATCH_SPREAD = (1, 2, 4)
+
+ARRIVALS = ("batch", "poisson")
+
+
+def generate_fleet(
+    net: PhysicalNetwork,
+    n_requests: int,
+    source: str,
+    destination: str,
+    batch_size: int,
+    mode: str,
+    K: int,
+    seed: int = 0,
+    arrival: str = "batch",
+    arrival_rate_rps: float = 1.0,
+    rate_rps: float = 1.0,
+    candidates: list[list[str]] | None = None,
+    candidates_per_stage: int = 2,
+    model_id: str = "model",
+    batch_spread: tuple[int, ...] = BATCH_SPREAD,
+) -> list[ServeRequest]:
+    """Deterministic seeded fleet of `n_requests` chains on one fabric.
+
+    Request i gets batch size ``batch_size * batch_spread[i % len]``, its own
+    seeded candidate sets (unless `candidates` pins them for every request),
+    and an arrival time: 0.0 for ``arrival="batch"`` or cumulative
+    Exponential(arrival_rate_rps) inter-arrivals for ``"poisson"``.
+    """
+    if arrival not in ARRIVALS:
+        raise ValueError(f"arrival must be one of {ARRIVALS}, got {arrival!r}")
+    rng = random.Random(seed)
+    nodes = sorted(net.nodes)
+    fleet = []
+    t = 0.0
+    for i in range(n_requests):
+        if arrival == "poisson":
+            t += rng.expovariate(arrival_rate_rps)
+        if candidates is not None:
+            cands = candidates
+        else:
+            cands = candidate_sets(K, seed * 10007 + i, nodes, source,
+                                   destination, candidates_per_stage)
+        fleet.append(ServeRequest(
+            request_id=i,
+            source=source,
+            destination=destination,
+            batch_size=batch_size * batch_spread[i % len(batch_spread)],
+            mode=mode,
+            K=K,
+            candidates=tuple(tuple(c) for c in cands),
+            arrival_s=t,
+            rate_rps=rate_rps,
+            model_id=model_id,
+        ))
+    return fleet

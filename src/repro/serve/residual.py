@@ -1,0 +1,205 @@
+"""Residual-capacity accounting for concurrent service chains.
+
+Accepted chains consume fabric capacity:
+
+* **link bandwidth** — a chain executing ``rate_rps`` times per second ships
+  ``b * delta_cut`` bytes per execution across every link of the cut's
+  subpath, i.e. a sustained flow of ``b * delta * 8 * rate`` bits/s, charged
+  against the link's forward rate (and its backward rate for the gradient
+  flow when training, per the paper's R^BW_{i,j} convention);
+* **node memory / disk** — a placed sub-model [lo, hi] holds its parameters
+  plus the batch-scaled peak smashed data in memory (exactly the left side of
+  constraints (14)-(15)) for as long as the chain is admitted.
+
+:class:`ResidualState` tracks the running usage, answers "does this plan
+still fit?", and materializes the *residual network* — the same topology with
+capacities reduced by current usage — that capacity-aware replanning solves
+against.  The paper's solvers know nothing about link capacities (their
+formulation has none), so a replanned chain is always re-checked against the
+residuals before being committed.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+from repro.core import (BW, FW, TR, LinkSpec, ModelProfile, NodeSpec,
+                        PhysicalNetwork, Plan)
+
+from .requests import ServeRequest
+
+# Absolute + relative slack for capacity comparisons (float sums of demands).
+_EPS_ABS = 1e-9
+_EPS_REL = 1e-12
+
+# Floor (bits/s) a kept residual link is clamped to in the direction a mode
+# does not reserve — keeps edge costs finite without admitting real flow.
+_MIN_RATE_BPS = 1e-3
+
+
+def _fits_cap(used: float, cap: float) -> bool:
+    return used <= cap + _EPS_ABS + _EPS_REL * abs(cap)
+
+
+@dataclass(frozen=True)
+class PlanDemand:
+    """The capacity footprint of one accepted chain."""
+
+    link_fw_bps: dict[tuple[str, str], float]
+    link_bw_bps: dict[tuple[str, str], float]
+    node_mem_bytes: dict[str, float]
+    node_disk_bytes: dict[str, float]
+
+
+def plan_demand(profile: ModelProfile, request: ServeRequest,
+                plan: Plan) -> PlanDemand:
+    """Per-link flow (bits/s) and per-node memory/disk (bytes) of a plan."""
+    b = request.batch_size
+    training = request.mode == TR
+    link_fw: dict[tuple[str, str], float] = defaultdict(float)
+    link_bw: dict[tuple[str, str], float] = defaultdict(float)
+    for k, path in enumerate(plan.paths):
+        cut = plan.segments[k][1]
+        fw_bps = b * profile.cut_bytes(cut, FW) * 8.0 * request.rate_rps
+        bw_bps = (b * profile.cut_bytes(cut, BW) * 8.0 * request.rate_rps
+                  if training else 0.0)
+        for u, v in zip(path, path[1:]):
+            link_fw[(u, v)] += fw_bps
+            link_bw[(u, v)] += bw_bps
+    # the tail subpath ships psi_K = 0 — no bandwidth reservation
+    node_mem: dict[str, float] = defaultdict(float)
+    node_disk: dict[str, float] = defaultdict(float)
+    for (lo, hi), node in zip(plan.segments, plan.placement):
+        mem = profile.seg_mem_bytes(lo, hi)
+        mem += b * profile.seg_peak_smashed(lo, hi, request.mode)
+        node_mem[node] += mem
+        node_disk[node] += profile.seg_disk_bytes(lo, hi)
+    return PlanDemand(dict(link_fw), dict(link_bw), dict(node_mem),
+                      dict(node_disk))
+
+
+@dataclass
+class ResidualState:
+    """Running capacity usage of one fabric under a set of accepted chains."""
+
+    base: PhysicalNetwork
+    used_link_fw: dict[tuple[str, str], float] = field(
+        default_factory=lambda: defaultdict(float))
+    used_link_bw: dict[tuple[str, str], float] = field(
+        default_factory=lambda: defaultdict(float))
+    used_mem: dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    used_disk: dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    committed: list[tuple[ServeRequest, Plan]] = field(default_factory=list)
+
+    # ---------------------------------------------------------------- queries
+    def fits(self, profile: ModelProfile, request: ServeRequest,
+             plan: Plan) -> bool:
+        """Would committing `plan` keep every link/node within capacity?"""
+        d = plan_demand(profile, request, plan)
+        for (u, v), f in d.link_fw_bps.items():
+            spec = self.base.links[(u, v)]
+            if not _fits_cap(self.used_link_fw[(u, v)] + f, spec.bw_fw):
+                return False
+            g = d.link_bw_bps.get((u, v), 0.0)
+            if g and not _fits_cap(self.used_link_bw[(u, v)] + g, spec.bw_bw):
+                return False
+        for n, m in d.node_mem_bytes.items():
+            if not _fits_cap(self.used_mem[n] + m,
+                             self.base.nodes[n].mem_capacity):
+                return False
+        for n, s in d.node_disk_bytes.items():
+            if not _fits_cap(self.used_disk[n] + s,
+                             self.base.nodes[n].disk_capacity):
+                return False
+        return True
+
+    def commit(self, profile: ModelProfile, request: ServeRequest,
+               plan: Plan) -> None:
+        d = plan_demand(profile, request, plan)
+        for k, f in d.link_fw_bps.items():
+            self.used_link_fw[k] += f
+        for k, g in d.link_bw_bps.items():
+            self.used_link_bw[k] += g
+        for n, m in d.node_mem_bytes.items():
+            self.used_mem[n] += m
+        for n, s in d.node_disk_bytes.items():
+            self.used_disk[n] += s
+        self.committed.append((request, plan))
+
+    # ---------------------------------------------------------- materialization
+    def materialize(self, mode: str | None = None,
+                    keep_saturated: bool = False) -> PhysicalNetwork:
+        """The residual network: capacities minus current usage.
+
+        Links with no forward residual are dropped (they can carry no smashed
+        data); for training chains (`mode=TR`) links with no backward residual
+        are dropped too, since the gradient flow reserves that direction.  A
+        kept link's unreserved direction is clamped to a tiny positive floor
+        so edge costs stay finite.  Nodes always remain routable — a node with
+        exhausted memory can still forward traffic, it just cannot host a
+        sub-model (its residual capacity is 0, so `segment_fits` rejects it).
+
+        ``keep_saturated=True`` keeps every link (rates clamped to the floor
+        instead of dropping) — used to *evaluate* an admitted plan's latency,
+        where zero-demand tail subpaths may legitimately cross saturated
+        links.
+        """
+        out = PhysicalNetwork()
+        for name, spec in self.base.nodes.items():
+            out.add_node(NodeSpec(
+                name, spec.compute,
+                max(0.0, spec.mem_capacity - self.used_mem[name]),
+                max(0.0, spec.disk_capacity - self.used_disk[name])))
+        for (u, v), spec in self.base.links.items():
+            fw = spec.bw_fw - self.used_link_fw[(u, v)]
+            bw = spec.bw_bw - self.used_link_bw[(u, v)]
+            if not keep_saturated:
+                if fw <= 0.0:
+                    continue
+                if mode == TR and bw <= 0.0:
+                    continue
+            out.add_link(u, v, LinkSpec(max(fw, _MIN_RATE_BPS),
+                                        max(bw, _MIN_RATE_BPS),
+                                        spec.delay_fw, spec.delay_bw))
+        return out
+
+    # ----------------------------------------------------------- verification
+    def conservation_ok(self, profile: ModelProfile) -> bool:
+        """Recompute usage from the committed plans and confirm (a) it matches
+        the running tallies and (b) nothing exceeds base capacity."""
+        fw: dict[tuple[str, str], float] = defaultdict(float)
+        bwd: dict[tuple[str, str], float] = defaultdict(float)
+        mem: dict[str, float] = defaultdict(float)
+        disk: dict[str, float] = defaultdict(float)
+        for request, plan in self.committed:
+            d = plan_demand(profile, request, plan)
+            for k, f in d.link_fw_bps.items():
+                fw[k] += f
+            for k, g in d.link_bw_bps.items():
+                bwd[k] += g
+            for n, m in d.node_mem_bytes.items():
+                mem[n] += m
+            for n, s in d.node_disk_bytes.items():
+                disk[n] += s
+        for tracked, recomputed in ((self.used_link_fw, fw),
+                                    (self.used_link_bw, bwd),
+                                    (self.used_mem, mem),
+                                    (self.used_disk, disk)):
+            keys = set(tracked) | set(recomputed)
+            for k in keys:
+                a, b = tracked.get(k, 0.0), recomputed.get(k, 0.0)
+                if abs(a - b) > _EPS_ABS + _EPS_REL * max(abs(a), abs(b)):
+                    return False
+        for (u, v), f in fw.items():
+            if not _fits_cap(f, self.base.links[(u, v)].bw_fw):
+                return False
+        for (u, v), g in bwd.items():
+            if g and not _fits_cap(g, self.base.links[(u, v)].bw_bw):
+                return False
+        for n, m in mem.items():
+            if not _fits_cap(m, self.base.nodes[n].mem_capacity):
+                return False
+        for n, s in disk.items():
+            if not _fits_cap(s, self.base.nodes[n].disk_capacity):
+                return False
+        return True

@@ -22,6 +22,17 @@ from .runner import SweepRunner
 from .suites import SUITES
 
 
+def _workers_arg(value: str) -> int | None:
+    """'auto' -> None (all cores); otherwise an int (see SweepRunner.resolve_workers)."""
+    if value == "auto":
+        return None
+    try:
+        return int(value)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected an integer or 'auto', got {value!r}")
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.sweep",
                                  description="scenario-sweep engine")
@@ -33,8 +44,10 @@ def main(argv: list[str] | None = None) -> int:
                     help="result cache dir (default <out>/.cache)")
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the on-disk result cache")
-    ap.add_argument("--workers", type=int, default=0,
-                    help="worker processes (0/1 = in-process serial)")
+    ap.add_argument("--workers", type=_workers_arg, default=0,
+                    help="worker processes: 0 or 1 = serial in-process "
+                         "(default), N >= 2 = N processes, 'auto' or a "
+                         "negative value = all cores (os.cpu_count())")
     ap.add_argument("--list", action="store_true", help="list suites and exit")
     args = ap.parse_args(argv)
 
@@ -56,7 +69,7 @@ def main(argv: list[str] | None = None) -> int:
     for name in names:
         specs = SUITES[name](quick=args.quick)
         print(f"# suite {name}: {len(specs)} scenarios "
-              f"(quick={args.quick}, workers={args.workers})", file=sys.stderr)
+              f"(quick={args.quick}, workers={runner.workers})", file=sys.stderr)
         t0 = time.perf_counter()
         results = runner.run(specs)
         wall = time.perf_counter() - t0

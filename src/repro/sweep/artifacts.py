@@ -20,7 +20,14 @@ CSV_FIELDS = [
     "K", "batch_size", "solver", "candidate_seed", "feasible", "latency_s",
     "computation_s", "transmission_s", "propagation_s", "wall_time_s",
     "iterations", "from_cache",
+    # serve-layer (fleet) columns; empty for single-chain scenarios
+    "n_requests", "policy", "arrival", "n_accepted", "acceptance_ratio",
+    "latency_p50_s", "latency_p95_s", "latency_p99_s",
 ]
+
+
+def _opt(v):
+    return "" if v is None else v
 
 
 def write_artifacts(out_dir: str | Path, suite_name: str,
@@ -66,6 +73,14 @@ def write_artifacts(out_dir: str | Path, suite_name: str,
                 "wall_time_s": r.wall_time_s,
                 "iterations": r.iterations,
                 "from_cache": r.from_cache,
+                "n_requests": s.n_requests if s.n_requests > 1 else "",
+                "policy": s.policy if s.n_requests > 1 else "",
+                "arrival": s.arrival if s.n_requests > 1 else "",
+                "n_accepted": _opt(r.n_accepted),
+                "acceptance_ratio": _opt(r.acceptance_ratio),
+                "latency_p50_s": _opt(r.latency_p50_s),
+                "latency_p95_s": _opt(r.latency_p95_s),
+                "latency_p99_s": _opt(r.latency_p99_s),
             })
     return {"json": json_path, "csv": csv_path}
 

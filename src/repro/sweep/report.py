@@ -37,7 +37,7 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
     agg: dict[str, dict] = defaultdict(
         lambda: {"n": 0, "n_feasible": 0, "gap_pct_sum": 0.0, "gap_pct_max": 0.0,
                  "n_gap": 0, "speedup_sum": 0.0, "n_speedup": 0,
-                 "pareto_count": 0})
+                 "pareto_count": 0, "accept_sum": 0.0, "n_accept": 0})
 
     for key, rs in sorted(groups.items()):
         feas = [r for r in rs if r.feasible]
@@ -60,6 +60,23 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
             row: dict = {"feasible": r.feasible,
                          "wall_time_s": r.wall_time_s,
                          "iterations": r.iterations}
+            if r.acceptance_ratio is not None:  # serve (fleet) scenario
+                # gap/speedup/Pareto compare one plan against the optimum;
+                # a fleet's mean latency averages a *different accepted set*
+                # per scheme, so fleets compare on acceptance ratio instead.
+                row["n_requests"] = r.spec.n_requests
+                row["n_accepted"] = r.n_accepted
+                row["acceptance_ratio"] = r.acceptance_ratio
+                row["latency_mean_s"] = r.latency_s
+                row["latency_p50_s"] = r.latency_p50_s
+                row["latency_p95_s"] = r.latency_p95_s
+                row["latency_p99_s"] = r.latency_p99_s
+                a["accept_sum"] += r.acceptance_ratio
+                a["n_accept"] += 1
+                if r.feasible:
+                    a["n_feasible"] += 1
+                entry["solvers"][r.spec.solver] = row
+                continue
             if r.feasible:
                 a["n_feasible"] += 1
                 row["latency_s"] = r.latency_s
@@ -91,6 +108,8 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
             "mean_speedup_vs_ref": (a["speedup_sum"] / a["n_speedup"]
                                     if a["n_speedup"] else None),
             "pareto_count": a["pareto_count"],
+            "mean_acceptance_ratio": (a["accept_sum"] / a["n_accept"]
+                                      if a["n_accept"] else None),
         }
     return {"n_groups": len(per_group), "summary": summary, "groups": per_group}
 
@@ -98,12 +117,14 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
 def format_report(report: dict) -> str:
     lines = [f"comparison over {report['n_groups']} scenario groups",
              f"{'solver':<10} {'feas':>9} {'mean gap%':>10} {'max gap%':>10} "
-             f"{'speedup':>9} {'pareto':>7}"]
+             f"{'speedup':>9} {'pareto':>7} {'accept':>7}"]
     for solver, s in report["summary"].items():
         gap = "-" if s["mean_gap_pct"] is None else f"{s['mean_gap_pct']:.2f}"
         mgap = "-" if s["max_gap_pct"] is None else f"{s['max_gap_pct']:.2f}"
         spd = ("-" if s["mean_speedup_vs_ref"] is None
                else f"{s['mean_speedup_vs_ref']:.1f}x")
+        acc = ("-" if s.get("mean_acceptance_ratio") is None
+               else f"{s['mean_acceptance_ratio']:.2f}")
         lines.append(f"{solver:<10} {s['n_feasible']:>4}/{s['n']:<4} {gap:>10} "
-                     f"{mgap:>10} {spd:>9} {s['pareto_count']:>7}")
+                     f"{mgap:>10} {spd:>9} {s['pareto_count']:>7} {acc:>7}")
     return "\n".join(lines)

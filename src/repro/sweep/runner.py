@@ -8,9 +8,9 @@ handled by the same worker):
     frontiers on ``PhysicalNetwork`` accumulate across grid points;
   * model profiles keyed by profile signature — so the prefix-sum tables are
     built once;
-  * ``EvalCache`` keyed by (topology, profile, batch, mode) — so per-(node,
-    segment) compute/fit tables are shared by every scheme and candidate seed
-    of the same problem cell.
+  * ``EvalCache`` keyed by (topology, profile) — batch/mode live in the
+    cache's own entry keys, so per-(node, segment) compute/fit tables are
+    shared by every scheme, candidate seed, and (b, mode) cell of the grid.
 
 The on-disk cache (``<cache_dir>/<spec_hash>.json``) memoizes finished
 scenario results, making warm re-runs of a suite near-instant.
@@ -24,24 +24,22 @@ from concurrent.futures import ProcessPoolExecutor
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
 
-from repro.core import (EvalCache, LatencyBreakdown, Plan, PlanEvaluator,
-                        SolveResult, bcd_solve, comm_ms_solve, comp_ms_solve,
-                        exact_solve, ilp_solve)
+from repro.core import (SOLVERS, EvalCache, LatencyBreakdown, Plan,
+                        PlanEvaluator, SolveResult)
 
 from .spec import ScenarioSpec
-
-SOLVERS = {
-    "ilp": ilp_solve,
-    "exact": exact_solve,
-    "bcd": bcd_solve,
-    "comp-ms": comp_ms_solve,
-    "comm-ms": comm_ms_solve,
-}
 
 
 @dataclass
 class ScenarioResult:
-    """Structured outcome of one grid point (JSON round-trippable)."""
+    """Structured outcome of one grid point (JSON round-trippable).
+
+    Serve scenarios (``spec.n_requests > 1``) fill the fleet fields instead of
+    the single-plan ones: ``latency_s`` is then the mean accepted-chain
+    latency, ``served`` holds the per-request admission records (enough to
+    replay and re-verify residual-capacity conservation), and ``iterations``
+    counts capacity-aware replans.
+    """
 
     spec: ScenarioSpec
     feasible: bool
@@ -56,6 +54,13 @@ class ScenarioResult:
     paths: list | None = None
     tail_path: list | None = None
     from_cache: bool = False
+    # serve-layer (fleet) fields
+    n_accepted: int | None = None
+    acceptance_ratio: float | None = None
+    latency_p50_s: float | None = None
+    latency_p95_s: float | None = None
+    latency_p99_s: float | None = None
+    served: list | None = None  # per-request admission records
 
     def to_dict(self) -> dict:
         d = asdict(self)
@@ -93,7 +98,9 @@ def _context(spec: ScenarioSpec):
     profile = _PROFILES.get(prof_key)
     if profile is None:
         profile = _PROFILES[prof_key] = spec.build_profile()
-    ev_key = (topo_key, prof_key, spec.batch_size, spec.mode)
+    # batch/mode are part of EvalCache entry keys, so one cache per
+    # (network, profile) pair is shared across every cell of the grid
+    ev_key = (topo_key, prof_key)
     cache = _EVAL_CACHES.get(ev_key)
     if cache is None:
         cache = _EVAL_CACHES[ev_key] = EvalCache()
@@ -107,12 +114,37 @@ def clear_context() -> None:
     _EVAL_CACHES.clear()
 
 
+def _run_serve_scenario(spec: ScenarioSpec, net, profile, cache) -> ScenarioResult:
+    """One fleet admission round (spec.n_requests > 1) through repro.serve."""
+    from repro.serve import ServePlanner
+
+    fleet = spec.build_fleet(net)
+    planner = ServePlanner(net, profile, solver=spec.solver, cache=cache,
+                           solver_kwargs=spec.solver_kwargs)
+    outcome = planner.admit(fleet, policy=spec.policy)
+    s = outcome.summary()
+    return ScenarioResult(
+        spec, outcome.n_accepted > 0,
+        latency_s=s["latency_mean_s"],
+        wall_time_s=outcome.wall_time_s,
+        iterations=outcome.n_replanned,
+        n_accepted=outcome.n_accepted,
+        acceptance_ratio=outcome.acceptance_ratio,
+        latency_p50_s=s["latency_p50_s"],
+        latency_p95_s=s["latency_p95_s"],
+        latency_p99_s=s["latency_p99_s"],
+        served=[sr.to_dict() for sr in outcome.served],
+    )
+
+
 def run_scenario(spec: ScenarioSpec, use_context_cache: bool = True) -> ScenarioResult:
     """Solve one grid point in-process."""
     if use_context_cache:
         net, profile, cache = _context(spec)
     else:
         net, profile, cache = spec.build_network(), spec.build_profile(), None
+    if spec.n_requests > 1:
+        return _run_serve_scenario(spec, net, profile, cache)
     request = spec.request()
     candidates = spec.build_candidates(net)
     solver = SOLVERS[spec.solver]
@@ -139,11 +171,30 @@ def run_scenario(spec: ScenarioSpec, use_context_cache: bool = True) -> Scenario
 
 
 def verify_result(result: ScenarioResult, atol: float = 1e-9) -> bool:
-    """Re-evaluate a (possibly reloaded) result's plan against the freshly built
-    scenario and confirm the recorded latency — the artifact round-trip check."""
+    """Re-evaluate a (possibly reloaded) result against the freshly built
+    scenario — the artifact round-trip check.
+
+    Single-chain results re-check the plan and its recorded latency; serve
+    results replay the admission records in order and confirm the accepted
+    chains never oversubscribe any residual link/node capacity, plus the
+    recorded acceptance bookkeeping.
+    """
+    spec = result.spec
+    if spec.n_requests > 1:
+        from repro.serve import ServedRequest, replay_verify
+
+        served = [ServedRequest.from_dict(d) for d in (result.served or [])]
+        if len(served) != spec.n_requests:
+            return False
+        n_acc = sum(s.accepted for s in served)
+        if n_acc != result.n_accepted:
+            return False
+        if abs((n_acc / len(served)) - result.acceptance_ratio) > atol:
+            return False
+        net, profile = spec.build_network(), spec.build_profile()
+        return replay_verify(net, profile, served)
     if not result.feasible:
         return True
-    spec = result.spec
     net, profile = spec.build_network(), spec.build_profile()
     ev = PlanEvaluator(net, profile, spec.request())
     plan = result.plan()
@@ -161,6 +212,12 @@ class SweepRunner:
     """Executes a list of ScenarioSpecs with optional process fan-out and an
     on-disk result cache keyed by spec content hash.
 
+    ``workers`` follows one explicit mapping (see :meth:`resolve_workers`,
+    covered by tests and docs/sweep.md): ``0`` or ``1`` runs serially
+    in-process (the default), ``n >= 2`` fans out over ``n`` worker
+    processes, and ``None`` or any negative value expands to
+    ``os.cpu_count()``.
+
     ``use_context_cache=False`` rebuilds the network/profile and uses a fresh
     EvalCache for every scenario — required when solver *wall time* is the
     measurement (warm shared caches would flatter whichever scheme runs last).
@@ -170,10 +227,22 @@ class SweepRunner:
                  workers: int | None = 0, use_disk_cache: bool = True,
                  use_context_cache: bool = True):
         self.cache_dir = Path(cache_dir) if cache_dir else None
-        self.workers = workers if workers is not None else (os.cpu_count() or 1)
+        self.workers = self.resolve_workers(workers)
         self.use_disk_cache = use_disk_cache and self.cache_dir is not None
         self.use_context_cache = use_context_cache
         self.last_stats: dict = {}
+
+    @staticmethod
+    def resolve_workers(workers: int | None) -> int:
+        """The one place the ``workers`` argument is interpreted:
+
+        * ``0`` or ``1`` -> serial, in-process (no pool is created);
+        * ``n >= 2``     -> ``n`` worker processes;
+        * ``None`` / negative -> ``os.cpu_count()`` (use every core).
+        """
+        if workers is None or workers < 0:
+            return os.cpu_count() or 1
+        return workers
 
     # ------------------------------------------------------------- disk cache
     def _cache_path(self, spec: ScenarioSpec) -> Path:

@@ -10,25 +10,28 @@ from __future__ import annotations
 
 import hashlib
 import json
-import random
 from dataclasses import asdict, dataclass, field
 
 from repro.core import (
     IF,
+    SOLVERS,
     TR,
     LinkSpec,
     ModelProfile,
     PhysicalNetwork,
     ServiceChainRequest,
+    candidate_sets,
     nsfnet,
     random_network,
     resnet101_profile,
     tpu_pod_topology,
 )
+from repro.serve.policies import POLICY_NAMES
+from repro.serve.requests import ARRIVALS
 
-SUITE_SCHEMA_VERSION = 1
+SUITE_SCHEMA_VERSION = 2
 
-SOLVER_NAMES = ("exact", "ilp", "bcd", "comp-ms", "comm-ms")
+SOLVER_NAMES = tuple(SOLVERS)  # the single registry lives in repro.core
 
 # ------------------------------------------------------------------ topologies
 TOPOLOGIES = {
@@ -99,22 +102,6 @@ def build_profile(name: str, kwargs: dict | None = None) -> ModelProfile:
     return factory(**(kwargs or {}))
 
 
-# --------------------------------------------------------------- candidate sets
-def candidate_sets(K: int, seed: int, nodes: list[str],
-                   source: str, dest: str, per_stage: int = 2) -> list[list[str]]:
-    """Paper Sec. VI-A2 candidate policy: first/last stage pinned to s/d; each
-    intermediate sub-model gets `per_stage` randomly, distinctly selected
-    candidate nodes."""
-    rng = random.Random(seed * 1000 + K)
-    mids = [n for n in nodes if n not in (source, dest)]
-    picked = rng.sample(mids, per_stage * (K - 2)) if K > 2 else []
-    cands = [[source]]
-    for k in range(K - 2):
-        cands.append(picked[per_stage * k : per_stage * (k + 1)])
-    cands.append([dest])
-    return cands
-
-
 # ----------------------------------------------------------------------- spec
 @dataclass
 class ScenarioSpec:
@@ -136,6 +123,12 @@ class ScenarioSpec:
     candidates: list | None = None  # pinned V^k sets; None -> seeded policy
     candidate_seed: int = 0
     candidates_per_stage: int = 2
+    # Serve-layer scenarios (repro.serve): n_requests > 1 turns the grid point
+    # into a fleet admission round — batch_size becomes the fleet's base batch
+    # and candidate_seed seeds fleet generation (arrivals + per-request V^k).
+    n_requests: int = 1
+    arrival: str = "batch"  # batch | poisson
+    policy: str = "fcfs"  # admission policy (repro.serve.policies)
     name: str = ""  # optional human label; not part of the content hash
     tags: dict = field(default_factory=dict)  # free-form grouping metadata
 
@@ -144,6 +137,12 @@ class ScenarioSpec:
             raise ValueError(f"mode must be IF|TR, got {self.mode!r}")
         if self.solver not in SOLVER_NAMES:
             raise ValueError(f"solver must be one of {SOLVER_NAMES}")
+        if self.n_requests < 1:
+            raise ValueError("n_requests must be >= 1")
+        if self.arrival not in ARRIVALS:
+            raise ValueError(f"arrival must be one of {ARRIVALS}")
+        if self.policy not in POLICY_NAMES:
+            raise ValueError(f"policy must be one of {POLICY_NAMES}")
         self.drop_links = [list(p) for p in self.drop_links]
         if self.candidates is not None:
             self.candidates = [list(c) for c in self.candidates]
@@ -200,3 +199,14 @@ class ScenarioSpec:
     def request(self) -> ServiceChainRequest:
         return ServiceChainRequest(self.profile, self.source, self.destination,
                                    self.batch_size, self.mode)
+
+    def build_fleet(self, net: PhysicalNetwork):
+        """The seeded request fleet of a serve scenario (n_requests > 1)."""
+        from repro.serve.requests import generate_fleet
+
+        return generate_fleet(
+            net, self.n_requests, self.source, self.destination,
+            self.batch_size, self.mode, self.K, seed=self.candidate_seed,
+            arrival=self.arrival, candidates=self.candidates,
+            candidates_per_stage=self.candidates_per_stage,
+            model_id=self.profile)

@@ -154,10 +154,63 @@ def nsfnet_faults(quick: bool = False) -> list[ScenarioSpec]:
     return specs
 
 
+def nsfnet_multirequest(quick: bool = False,
+                        policies: tuple[str, ...] = ("fcfs", "latency-greedy",
+                                                     "batch-desc"),
+                        schemes: tuple[str, ...] = ("exact", "bcd")
+                        ) -> list[ScenarioSpec]:
+    """Concurrent serving on NSFNET: fleets of chains (batch spread x1/x2/x4)
+    admitted onto one fabric with residual-capacity accounting.  Groups share
+    everything but the solver, so the report compares BCD's acceptance ratio
+    against the exact replanner's under identical policies and load."""
+    fleets = [4, 16] if quick else [2, 4, 8, 16, 32]
+    seeds = 1 if quick else 3
+    specs = []
+    for n in fleets:
+        for policy in policies:
+            for solver in schemes:
+                for seed in range(seeds):
+                    specs.append(ScenarioSpec(
+                        topology="nsfnet", topology_kwargs={"source": SOURCE},
+                        profile="resnet101", source=SOURCE, destination=DEST,
+                        batch_size=2, mode=IF, K=3, solver=solver,
+                        candidate_seed=seed,
+                        n_requests=n, arrival="batch", policy=policy,
+                        tags={"suite": "nsfnet_multirequest", "seed": seed,
+                              "cell": f"n{n}_{policy}"}))
+    return specs
+
+
+def random_load_scaling(quick: bool = False,
+                        policies: tuple[str, ...] = ("fcfs", "latency-greedy")
+                        ) -> list[ScenarioSpec]:
+    """Load ladder on random G(V, p=0.2) fabrics: growing Poisson fleets of
+    training chains, acceptance ratio and latency percentiles vs load."""
+    vs = [10, 20] if quick else [10, 20, 30, 40]
+    loads = [8, 32] if quick else [8, 16, 32, 64]
+    specs = []
+    for V in vs:
+        dest = sorted(f"v{i}" for i in range(1, V + 1))[-1]
+        for n in loads:
+            for policy in policies:
+                specs.append(ScenarioSpec(
+                    topology="random",
+                    topology_kwargs={"n_nodes": V, "p": 0.2, "seed": 7,
+                                     "source": "v1"},
+                    profile="resnet101", source="v1", destination=dest,
+                    batch_size=2, mode=TR, K=4, solver="bcd",
+                    n_requests=n, arrival="poisson", policy=policy,
+                    tags={"suite": "random_load_scaling",
+                          "cell": f"V{V}_n{n}_{policy}"}))
+    return specs
+
+
 SUITES = {
     "nsfnet_paper": nsfnet_paper,
     "exec_time_k": exec_time_k,
     "random_scaling": random_scaling,
     "tpu_pod": tpu_pod,
     "nsfnet_faults": nsfnet_faults,
+    "nsfnet_multirequest": nsfnet_multirequest,
+    "random_load_scaling": random_load_scaling,
 }

@@ -11,6 +11,8 @@ from repro.optim import make_optimizer
 from repro.serving import make_serve_step, prefill
 from repro.train import make_train_step
 
+pytestmark = pytest.mark.slow  # XLA-compiled train/serve steps per arch (~2min)
+
 B, S = 2, 32
 
 

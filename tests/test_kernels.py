@@ -6,6 +6,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.slow  # interpret-mode kernel sweeps (~30s)
+
 RNG = np.random.default_rng(42)
 
 

@@ -45,6 +45,7 @@ def test_group_profile_conserves_totals():
         sum(l.mem_bytes for l in block_rows))
 
 
+@pytest.mark.slow  # subprocess shard_map pipeline run (~1 min per arch)
 @pytest.mark.parametrize("arch", ["qwen3-14b", "mamba2-370m"])
 def test_pipeline_runtime_equivalence(arch):
     """Pipelined forward == sequential forward; pipelined train step runs."""

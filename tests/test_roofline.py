@@ -6,6 +6,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess dry-runs compile whole models
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 TOY = r"""

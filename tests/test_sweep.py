@@ -146,6 +146,21 @@ def test_runner_without_context_cache_matches():
         assert c.segments == w.segments and c.placement == w.placement
 
 
+def test_workers_mapping_is_explicit():
+    """0/1 -> serial in-process, n>=2 -> n processes, None/negative -> all
+    cores (the documented contract of SweepRunner/the --workers flag)."""
+    import os
+
+    cpus = os.cpu_count() or 1
+    assert SweepRunner.resolve_workers(0) == 0
+    assert SweepRunner.resolve_workers(1) == 1
+    assert SweepRunner.resolve_workers(4) == 4
+    assert SweepRunner.resolve_workers(None) == cpus
+    assert SweepRunner.resolve_workers(-1) == cpus
+    assert SweepRunner(workers=0).workers == 0  # the default stays serial
+    assert SweepRunner(workers=None).workers == cpus
+
+
 def test_disk_cache_serves_second_run(tmp_path):
     specs = [_spec(solver=s) for s in ("exact", "bcd", "comm-ms")]
     runner = SweepRunner(cache_dir=tmp_path / "cache", workers=0)
