@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify verify-fast test test-fast sweep-quick bench-quick clean
+.PHONY: verify verify-fast test test-fast sweep-quick bench-quick docs-check clean
 
 ## verify: tier-1 tests + one quick end-to-end sweep (the CI gate)
 verify: test sweep-quick
@@ -27,6 +27,12 @@ sweep-quick:
 ## bench-quick: all paper-figure benchmarks at the reduced CI tier
 bench-quick:
 	$(PYTHON) -m benchmarks.run --quick
+
+## docs-check: CLIs import/--help cleanly and docs/*.md links are unbroken
+docs-check:
+	$(PYTHON) -m repro.sweep --help > /dev/null
+	$(PYTHON) -m repro.serve --help > /dev/null
+	$(PYTHON) scripts/check_docs_sync.py
 
 clean:
 	rm -rf sweep_out .pytest_cache

@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Docs-sync smoke check (CI): every docs/*.md file referenced from README.md
+and from other docs exists, and every docs/*.md on disk is reachable from
+README.md (no orphaned documentation).  Exits non-zero with a report on
+drift."""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\(((?:docs/)?[\w.-]+\.md)(?:#[\w-]+)?\)")
+
+
+def doc_links(path: Path) -> set[Path]:
+    """docs/*.md paths referenced by markdown links in `path` (repo-relative)."""
+    out = set()
+    for target in LINK_RE.findall(path.read_text()):
+        if target.startswith("docs/"):
+            out.add(ROOT / target)
+        elif path.parent == ROOT / "docs":
+            out.add(ROOT / "docs" / target)
+    return out
+
+
+def main() -> int:
+    errors: list[str] = []
+    readme = ROOT / "README.md"
+    reachable = doc_links(readme)
+    for doc in sorted((ROOT / "docs").glob("*.md")):
+        reachable |= doc_links(doc)
+
+    for ref in sorted(reachable):
+        if not ref.exists():
+            errors.append(f"broken doc link: {ref.relative_to(ROOT)}")
+
+    readme_reachable = doc_links(readme)
+    frontier = list(readme_reachable)
+    while frontier:  # transitive closure from README
+        doc = frontier.pop()
+        if not doc.exists():
+            continue
+        for ref in doc_links(doc):
+            if ref not in readme_reachable:
+                readme_reachable.add(ref)
+                frontier.append(ref)
+    for doc in sorted((ROOT / "docs").glob("*.md")):
+        if doc not in readme_reachable:
+            errors.append(f"orphaned doc (not reachable from README.md): "
+                          f"{doc.relative_to(ROOT)}")
+
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        return 1
+    print(f"docs-sync ok: {len(readme_reachable)} docs reachable from README.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

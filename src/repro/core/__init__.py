@@ -13,6 +13,9 @@ from .costmodel import (
     BW,
     FW,
     IF,
+    PIPE,
+    SCHEDULES,
+    SEQ,
     TR,
     CPU_XEON_6226R,
     GPU_RTX_A6000,
@@ -20,6 +23,7 @@ from .costmodel import (
     LayerProfile,
     ModelProfile,
     cuts_from_segments,
+    effective_microbatches,
     even_split,
     segments_from_sizes,
     tpu_group_compute_model,
@@ -47,7 +51,7 @@ SOLVERS = {
 }
 
 __all__ = [
-    "BW", "FW", "IF", "TR",
+    "BW", "FW", "IF", "TR", "SEQ", "PIPE", "SCHEDULES", "effective_microbatches",
     "CPU_XEON_6226R", "GPU_RTX_A6000", "ComputeModel",
     "EvalCache", "LayerProfile", "ModelProfile", "LatencyBreakdown",
     "Plan", "PlanEvaluator", "ServiceChainRequest", "SolveResult",

@@ -116,6 +116,33 @@ def comm_ms_split(
     return _dp_split(profile.L, K, seg_comm)
 
 
+def comp_balance_split(
+    net: PhysicalNetwork,
+    profile: ModelProfile,
+    request: ServiceChainRequest,
+    K: int,
+    candidates: list[list[str]],
+    cache: EvalCache | None = None,
+) -> list[tuple[int, int]] | None:
+    """Compute-balanced splitting: each stage costed at its *fastest* feasible
+    candidate, with a quadratic penalty so the DP balances stage times instead
+    of summing them — a minimax surrogate expressible in the min-sum DP.  Used
+    as the pipelined BCD's second initialization: the pipeline bottleneck
+    rewards balanced stages, which the even/min-sum splits don't target."""
+    ev = PlanEvaluator(net, profile, request, cache=cache)
+
+    def stage_cost(k: int, lo: int, hi: int) -> float:
+        best = INF
+        for i in candidates[k]:
+            if ev.segment_fits(i, lo, hi):
+                best = min(best, ev.segment_comp_s(i, lo, hi))
+        if best == INF:
+            return INF
+        return best * best
+
+    return _dp_split(profile.L, K, stage_cost)
+
+
 def min_memory_split(
     profile: ModelProfile, request: ServiceChainRequest, K: int
 ) -> list[tuple[int, int]] | None:

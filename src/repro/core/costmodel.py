@@ -24,6 +24,22 @@ BW = "BW"
 IF = "IF"  # inference mode
 TR = "TR"  # training mode
 
+# Execution schedules.  "seq" is the paper's model: sub-model k+1 starts only
+# after sub-model k finished and its smashed data fully arrived.  "pipe" splits
+# the batch into n_microbatches that flow through the placed chain like a
+# pipeline (Wei et al., arXiv:2505.04368): end-to-end latency becomes pipeline
+# fill/drain plus (M-1) steady-state bottleneck-stage steps (docs/pipeline.md).
+SEQ = "seq"
+PIPE = "pipe"
+SCHEDULES = (SEQ, PIPE)
+
+
+def effective_microbatches(batch_size: int, n_microbatches: int) -> int:
+    """Clamp the microbatch count to [1, b]: a microbatch carries >= 1 sample,
+    so a b-sample batch pipelines at most b-deep.  M=1 is exactly the
+    sequential schedule."""
+    return max(1, min(int(n_microbatches), int(batch_size)))
+
 
 def dirs_for_mode(mode: str) -> tuple[str, ...]:
     """D(mode) in the paper: {FW} for inference, {FW, BW} for training."""

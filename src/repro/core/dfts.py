@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .costmodel import BW, FW, TR, ModelProfile
+from .costmodel import BW, FW, PIPE, TR, ModelProfile
 from .network import PhysicalNetwork
 from .plan import EvalCache, Plan, PlanEvaluator, ServiceChainRequest
 
@@ -43,11 +43,14 @@ def _relax_stage_scalar(
     fw_bytes: float,
     bw_bytes: float | None,
     targets: list[str],
+    trans_cap: float | None = None,
+    trans_scale: float = 1.0,
 ) -> dict[str, tuple[float, str]]:
     """Reference scalar relaxation: per-target min over cached frontier dicts.
     Kept as the equivalence oracle for `_relax_stage` (tests assert bit-for-bit
     agreement); the hot path below vectorizes the same min-plus composition."""
-    frontiers = {s: net.sssp(s, fw_bytes, bw_bytes) for s in best}
+    frontiers = {s: net.sssp(s, fw_bytes, bw_bytes, trans_cap, trans_scale)
+                 for s in best}
     out: dict[str, tuple[float, str]] = {}
     for t in targets:
         bd, bs = INF, None
@@ -66,6 +69,8 @@ def _relax_stage(
     fw_bytes: float,
     bw_bytes: float | None,
     targets: list[str],
+    trans_cap: float | None = None,
+    trans_scale: float = 1.0,
 ) -> dict[str, tuple[float, str]]:
     """target -> (dist, argmin source) as a vectorized min-plus composition.
 
@@ -79,7 +84,7 @@ def _relax_stage(
     if not targets:
         return {}
     srcs = tuple(best)
-    D = net.frontier_matrix(srcs, fw_bytes, bw_bytes)
+    D = net.frontier_matrix(srcs, fw_bytes, bw_bytes, trans_cap, trans_scale)
     idx = net.node_index()
     cols = [idx[t] for t in targets]
     comp = np.asarray([best[s] for s in srcs])[:, None] + D[:, cols]  # [S, T]
@@ -93,8 +98,9 @@ def _relax_stage(
 
 
 def _stage_path(net: PhysicalNetwork, src: str, dst: str, fw_bytes: float,
-                bw_bytes: float | None) -> list[str]:
-    _, parent = net.sssp(src, fw_bytes, bw_bytes)
+                bw_bytes: float | None, trans_cap: float | None = None,
+                trans_scale: float = 1.0) -> list[str]:
+    _, parent = net.sssp(src, fw_bytes, bw_bytes, trans_cap, trans_scale)
     return _backtrack(parent, dst, {src})
 
 
@@ -107,7 +113,13 @@ def dfts(
     cache: EvalCache | None = None,
 ) -> Plan | None:
     """Optimal placement + chaining for fixed segments.  Returns None if every
-    placement is capacity-infeasible (imaginary links pruned, Sec. V-C)."""
+    placement is capacity-infeasible (imaginary links pruned, Sec. V-C).
+
+    Pipelined requests (schedule="pipe", M > 1) are routed to the
+    bottleneck-capped tour search `_dfts_pipe`, which is exact for the
+    pipelined objective fill + (M-1)*tau/M."""
+    if request.schedule == PIPE and request.microbatches() > 1:
+        return _dfts_pipe(net, profile, request, segments, candidates, cache)
     K = len(segments)
     assert len(candidates) == K
     ev = PlanEvaluator(net, profile, request, cache=cache)
@@ -163,3 +175,135 @@ def dfts(
     tail_path = tail if len(tail) > 1 else []
     return Plan(segments=list(segments), placement=placement, paths=paths,
                 tail_path=tail_path)
+
+
+def _capped_tour(
+    net: PhysicalNetwork,
+    request: ServiceChainRequest,
+    segments: list[tuple[int, int]],
+    comp: list[dict[str, float]],
+    cut_sizes: list[tuple[float, float | None]],
+    cap: float | None,
+    inv_M: float,
+) -> Plan | None:
+    """One bottleneck-capped tour: the sequential stage search with candidate
+    nodes pruned to comp <= cap, links pruned to trans <= cap, and transmission
+    scaled by 1/M — minimizes the pipeline *fill* among plans whose every stage
+    fits under ``cap``."""
+    K = len(segments)
+    best = {i: c * inv_M for i, c in comp[0].items()
+            if cap is None or c <= cap}
+    if not best:
+        return None
+    pred_node: list[dict[str, str]] = [dict() for _ in range(K)]
+    for k in range(1, K):
+        fw_bytes, bw_bytes = cut_sizes[k]
+        feas = [i for i, c in comp[k].items() if cap is None or c <= cap]
+        reached = _relax_stage(net, best, fw_bytes, bw_bytes, feas, cap, inv_M)
+        nxt: dict[str, float] = {}
+        for i, (dist, src) in reached.items():
+            if dist < INF:
+                nxt[i] = dist + comp[k][i] * inv_M
+                pred_node[k][i] = src
+        if not nxt:
+            return None
+        best = nxt
+
+    # The evaluator charges the psi_K = 0 tail in the FW direction only
+    # (Eq. 16's S_{K+1}); the tour must use the same convention so its fill
+    # equals the evaluator's and the cap-scan incumbent bound stays exact.
+    tail_bw = None
+    reached = _relax_stage(net, best, 0.0, tail_bw, [request.destination],
+                           cap, inv_M)
+    if request.destination not in reached:
+        return None
+    tail_src = reached[request.destination][1]
+    tail = _stage_path(net, tail_src, request.destination, 0.0, tail_bw,
+                       cap, inv_M)
+
+    placement = [""] * K
+    placement[K - 1] = tail_src
+    for k in range(K - 1, 0, -1):
+        placement[k - 1] = pred_node[k][placement[k]]
+    paths = [
+        _stage_path(net, placement[k - 1], placement[k], *cut_sizes[k],
+                    cap, inv_M)
+        for k in range(1, K)
+    ]
+    return Plan(segments=list(segments), placement=placement, paths=paths,
+                tail_path=tail if len(tail) > 1 else [])
+
+
+def _dfts_pipe(
+    net: PhysicalNetwork,
+    profile: ModelProfile,
+    request: ServiceChainRequest,
+    segments: list[tuple[int, int]],
+    candidates: list[list[str]],
+    cache: EvalCache | None = None,
+) -> Plan | None:
+    """Optimal placement + chaining for fixed segments under the *pipelined*
+    objective fill + (M-1)/M * tau (docs/pipeline.md).
+
+    The fill part is additive along the tour (comp/M imaginary links, trans/M +
+    prop physical links) but the bottleneck tau = max stage time is not, so the
+    search scans candidate bottleneck caps: for each cap tau, prune stages
+    slower than tau and minimize fill with the sequential tour machinery; the
+    optimum's bottleneck is one of the finitely many stage-time values, so
+    taking the best evaluated plan over the scan is exact.  An incumbent bound
+    prunes caps that can no longer contain the optimum's bottleneck
+    ((M-1)/M * tau + min_fill >= best) and caps at or above the unconstrained
+    plan's bottleneck (they reproduce the unconstrained plan).
+    """
+    K = len(segments)
+    assert len(candidates) == K
+    ev = PlanEvaluator(net, profile, request, cache=cache)
+    b = request.batch_size
+    training = request.mode == TR
+    M = request.microbatches()
+    inv_M = 1.0 / M
+    c_bub = (M - 1) / M
+
+    comp: list[dict[str, float]] = []
+    for k, (lo, hi) in enumerate(segments):
+        comp.append({i: ev.segment_comp_s(i, lo, hi) for i in candidates[k]
+                     if ev.segment_fits(i, lo, hi)})
+        if not comp[k]:
+            return None
+
+    cut_sizes: list[tuple[float, float | None]] = [(0.0, None)] * K
+    for k in range(1, K):
+        cut = segments[k - 1][1]
+        fw = b * profile.cut_bytes(cut, FW)
+        bw = b * profile.cut_bytes(cut, BW) if training else None
+        cut_sizes[k] = (fw, bw)
+
+    # Candidate bottleneck values: every stage time any plan can exhibit.
+    lb = max(min(c.values()) for c in comp)
+    taus = {v for c in comp for v in c.values()}
+    for k in range(1, K):
+        fw, bw = cut_sizes[k]
+        for (u, v) in net.links:
+            taus.add(net.link_trans_s(u, v, fw, bw))
+    cand_taus = sorted(t for t in taus if t >= lb)
+
+    plan0 = _capped_tour(net, request, segments, comp, cut_sizes, None, inv_M)
+    if plan0 is None:
+        return None
+    best_plan, best_lb = plan0, ev.evaluate(plan0)
+    best_lat = best_lb.total_s
+    fill_min = (best_lb.computation_s + best_lb.transmission_s
+                + best_lb.propagation_s)
+    tau0 = ev.bottleneck_s(plan0)
+
+    for tau in cand_taus:
+        if tau >= tau0 or fill_min + c_bub * tau >= best_lat:
+            break
+        plan_t = _capped_tour(net, request, segments, comp, cut_sizes, tau,
+                              inv_M)
+        if plan_t is None:
+            continue
+        lat = ev.latency_s(plan_t)
+        if lat < best_lat:
+            best_plan, best_lat = plan_t, lat
+    return best_plan

@@ -86,6 +86,12 @@ def ilp_solve(
     cache: object | None = None,  # accepted for solver-API uniformity; the MILP
     # builds its own coefficient tables and has nothing to memoize across calls.
 ) -> SolveResult:
+    if request.microbatches() > 1:
+        # The MILP linearizes the *sequential* Eq. (16) objective; the
+        # pipelined bottleneck max has no formulation here.  The exact DP
+        # (`exact_solve`) is the pipelined optimality oracle instead.
+        raise ValueError("ilp_solve models schedule='seq' only; "
+                         "use exact_solve/bcd_solve for pipelined requests")
     t0 = time.perf_counter()
     L = profile.L
     b = request.batch_size

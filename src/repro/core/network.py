@@ -87,12 +87,28 @@ class PhysicalNetwork:
         return [(v, s) for (a, v), s in self.links.items() if a == u]
 
     # ------------------------------------------------------------------ routing
-    def edge_cost(self, u: str, v: str, fw_bytes: float, bw_bytes: float | None) -> float:
-        """Per-link chaining cost c^k_{i,j} (Sec. V-C): FW transfer (+ BW if training)."""
+    def link_trans_s(self, u: str, v: str, fw_bytes: float,
+                     bw_bytes: float | None) -> float:
+        """Transmission time only (no propagation) of one cut's smashed data on
+        link (u, v) — the link's *occupancy* per batch, i.e. its pipeline-stage
+        time in the pipelined execution model (docs/pipeline.md)."""
         link = self.links[(u, v)]
-        cost = transmission_time_s(fw_bytes, link.bw_fw) + link.delay_fw
+        t = transmission_time_s(fw_bytes, link.bw_fw)
         if bw_bytes is not None:
-            cost += transmission_time_s(bw_bytes, link.bw_bw) + link.delay_bw
+            t += transmission_time_s(bw_bytes, link.bw_bw)
+        return t
+
+    def edge_cost(self, u: str, v: str, fw_bytes: float, bw_bytes: float | None,
+                  trans_scale: float = 1.0) -> float:
+        """Per-link chaining cost c^k_{i,j} (Sec. V-C): FW transfer (+ BW if
+        training).  ``trans_scale`` multiplies only the transmission terms —
+        the pipelined solvers route with scale 1/M (a microbatch's share of the
+        fill cost) while propagation is charged in full."""
+        link = self.links[(u, v)]
+        cost = transmission_time_s(fw_bytes, link.bw_fw) * trans_scale + link.delay_fw
+        if bw_bytes is not None:
+            cost += (transmission_time_s(bw_bytes, link.bw_bw) * trans_scale
+                     + link.delay_bw)
         return cost
 
     def dijkstra(
@@ -100,16 +116,28 @@ class PhysicalNetwork:
         sources: dict[str, float],
         fw_bytes: float,
         bw_bytes: float | None,
+        trans_cap: float | None = None,
+        trans_scale: float = 1.0,
     ) -> tuple[dict[str, float], dict[str, str | None]]:
         """Multi-source Dijkstra with smashed-data-dependent link costs.
 
         `sources` maps node -> initial distance (enables the stage-wise shortest
         path *tour* with a single Dijkstra per stage, as in the DFTS layered
         search).  Returns (dist, parent).
+
+        ``trans_cap`` excludes links whose per-batch transmission time
+        (``link_trans_s``) exceeds the cap — the bottleneck-capped searches of
+        the pipelined solvers; ``trans_scale`` scales transmission (not
+        propagation) in the edge cost.  The defaults reproduce the sequential
+        behaviour exactly (scaling by 1.0 is an IEEE identity).
         """
         adj: dict[str, list[tuple[str, float]]] = {n: [] for n in self.nodes}
         for (u, v), _ in self.links.items():
-            adj[u].append((v, self.edge_cost(u, v, fw_bytes, bw_bytes)))
+            if (trans_cap is not None
+                    and self.link_trans_s(u, v, fw_bytes, bw_bytes) > trans_cap):
+                continue
+            adj[u].append((v, self.edge_cost(u, v, fw_bytes, bw_bytes,
+                                             trans_scale)))
         dist = {n: float("inf") for n in self.nodes}
         parent: dict[str, str | None] = {n: None for n in self.nodes}
         pq: list[tuple[float, str]] = []
@@ -136,19 +164,23 @@ class PhysicalNetwork:
         return dist, parent
 
     def sssp(
-        self, source: str, fw_bytes: float, bw_bytes: float | None
+        self, source: str, fw_bytes: float, bw_bytes: float | None,
+        trans_cap: float | None = None, trans_scale: float = 1.0,
     ) -> tuple[dict[str, float], dict[str, str | None]]:
         """Cached single-source Dijkstra frontier for one smashed-data size.
 
-        The (dist, parent) maps are memoized per (source, fw_bytes, bw_bytes);
-        treat them as immutable.  Stage relaxations over a candidate *set* are
-        the min-composition of these frontiers (dist_S(v) = min_s d0[s] +
-        dist_s(v)), so one cache serves every multi-source tour query.
+        The (dist, parent) maps are memoized per (source, fw_bytes, bw_bytes,
+        trans_cap, trans_scale); treat them as immutable.  Stage relaxations
+        over a candidate *set* are the min-composition of these frontiers
+        (dist_S(v) = min_s d0[s] + dist_s(v)), so one cache serves every
+        multi-source tour query — including the capped/scaled frontiers of the
+        pipelined solvers' bottleneck scans.
         """
-        key = (source, fw_bytes, bw_bytes)
+        key = (source, fw_bytes, bw_bytes, trans_cap, trans_scale)
         hit = self._sssp_cache.get(key)
         if hit is None:
-            hit = self.dijkstra({source: 0.0}, fw_bytes, bw_bytes)
+            hit = self.dijkstra({source: 0.0}, fw_bytes, bw_bytes,
+                                trans_cap, trans_scale)
             self._sssp_cache[key] = hit
         return hit
 
@@ -163,7 +195,8 @@ class PhysicalNetwork:
         return self._node_idx
 
     def frontier_matrix(
-        self, sources: tuple[str, ...], fw_bytes: float, bw_bytes: float | None
+        self, sources: tuple[str, ...], fw_bytes: float, bw_bytes: float | None,
+        trans_cap: float | None = None, trans_scale: float = 1.0,
     ) -> np.ndarray:
         """Dense [S, V] matrix of cached single-source frontiers.
 
@@ -174,13 +207,13 @@ class PhysicalNetwork:
         iterations, solver calls, and all requests of a serve admission round.
         Read-only; invalidated with the frontier cache on topology mutation.
         """
-        key = (sources, fw_bytes, bw_bytes)
+        key = (sources, fw_bytes, bw_bytes, trans_cap, trans_scale)
         mat = self._frontier_mats.get(key)
         if mat is None:
             idx = self.node_index()
             mat = np.full((len(sources), len(idx)), float("inf"))
             for r, s in enumerate(sources):
-                dist, _ = self.sssp(s, fw_bytes, bw_bytes)
+                dist, _ = self.sssp(s, fw_bytes, bw_bytes, trans_cap, trans_scale)
                 for n, d in dist.items():
                     mat[r, idx[n]] = d
             mat.setflags(write=False)

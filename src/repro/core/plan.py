@@ -1,26 +1,51 @@
 """Service chain requests, plans (splitting + placement + chaining) and the latency
 objective T(x, y, b, mode) with its computation / transmission / propagation
-breakdown (paper Eqs. (1), (16)-(18); Figs. 8-9 breakdowns)."""
+breakdown (paper Eqs. (1), (16)-(18); Figs. 8-9 breakdowns).
+
+Two execution schedules are supported (see docs/pipeline.md):
+
+* ``seq`` — the paper's model: stage k+1 starts only after stage k finished and
+  its smashed data fully arrived; latency is the plain sum of Eq. (16).
+* ``pipe`` — the batch is split into M microbatches that flow through the
+  placed chain like a pipeline.  Each *resource* (a hosting node, or one
+  physical link of a subpath) is a pipeline stage occupied ``t/M`` per
+  microbatch, where ``t`` is its full-batch time; end-to-end latency is
+  pipeline fill (sum of per-microbatch stage times + all propagation) plus the
+  drain term ``(M-1) * max_stage / M`` recorded as ``bubble_s``.  With M = 1
+  this is bit-for-bit the sequential sum.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from .costmodel import BW, FW, IF, TR, ModelProfile, dirs_for_mode, validate_segments
+from .costmodel import (BW, FW, IF, PIPE, SCHEDULES, SEQ, TR, ModelProfile,
+                        dirs_for_mode, effective_microbatches, validate_segments)
 from .network import PhysicalNetwork
 
 
 @dataclass(frozen=True)
 class ServiceChainRequest:
-    """R = (id, s, d, b, mode) — paper Sec. III-A."""
+    """R = (id, s, d, b, mode) — paper Sec. III-A — plus the execution
+    schedule (``seq`` | ``pipe`` with ``n_microbatches``)."""
 
     model_id: str
     source: str
     destination: str
     batch_size: int
     mode: str  # IF | TR
+    schedule: str = SEQ  # seq | pipe
+    n_microbatches: int = 1
 
     def __post_init__(self) -> None:
         assert self.mode in (IF, TR)
+        assert self.schedule in SCHEDULES, f"unknown schedule {self.schedule!r}"
+        assert self.n_microbatches >= 1
+
+    def microbatches(self) -> int:
+        """Effective pipeline depth M: 1 under ``seq``, else clamped to [1, b]."""
+        if self.schedule != PIPE:
+            return 1
+        return effective_microbatches(self.batch_size, self.n_microbatches)
 
 
 @dataclass
@@ -28,16 +53,19 @@ class LatencyBreakdown:
     computation_s: float = 0.0
     transmission_s: float = 0.0
     propagation_s: float = 0.0
+    bubble_s: float = 0.0  # pipeline drain (M-1)*max_stage/M; 0 under seq
 
     @property
     def total_s(self) -> float:
-        return self.computation_s + self.transmission_s + self.propagation_s
+        return (self.computation_s + self.transmission_s + self.propagation_s
+                + self.bubble_s)
 
     def __add__(self, other: "LatencyBreakdown") -> "LatencyBreakdown":
         return LatencyBreakdown(
             self.computation_s + other.computation_s,
             self.transmission_s + other.transmission_s,
             self.propagation_s + other.propagation_s,
+            self.bubble_s + other.bubble_s,
         )
 
 
@@ -69,12 +97,15 @@ class Plan:
 class EvalCache:
     """Memo tables for per-(node, segment) compute time and capacity checks.
 
-    Entries are batch-size- and mode-dependent, so both are part of the memo
-    key: a single instance is safe to share across heterogeneous requests of
-    one (network, profile) — the serve layer admits whole fleets against one
-    cache that way, and the sweep runner keys shared instances per problem
-    cell.  Solvers that receive no cache build a private one per call, which
-    still collapses the repeated segment queries inside their own DP loops.
+    Entries are batch-size-, mode- and schedule-dependent, so all are part of
+    the memo key: a single instance is safe to share across heterogeneous
+    requests of one (network, profile) — the serve layer admits whole fleets
+    against one cache that way, and the sweep runner keys shared instances per
+    problem cell.  (Full-batch stage times are in fact schedule-invariant;
+    keeping the schedule in the key keeps seq/pipe entries disjoint by design
+    so schedule-specific tables can be added without aliasing.)  Solvers that
+    receive no cache build a private one per call, which still collapses the
+    repeated segment queries inside their own DP loops.
 
     `fits` additionally depends on node capacities, so a cache must never be
     shared across *networks* (e.g. residual-capacity views); `comp` depends
@@ -84,8 +115,9 @@ class EvalCache:
     __slots__ = ("comp", "fits")
 
     def __init__(self) -> None:
-        self.comp: dict[tuple[str, int, int, int, str], float] = {}
-        self.fits: dict[tuple[str, int, int, int, str], bool] = {}
+        # keys: (node, lo, hi, batch_size, mode, schedule, n_microbatches)
+        self.comp: dict[tuple, float] = {}
+        self.fits: dict[tuple, bool] = {}
 
     def fork_fits(self) -> "EvalCache":
         """A cache sharing this one's compute table but with fresh fit tables —
@@ -105,8 +137,9 @@ class PlanEvaluator:
         self.profile = profile
         self.request = request
         self.cache = cache if cache is not None else EvalCache()
-        # memo-key suffix: EvalCache entries are batch/mode-dependent
-        self._ck = (request.batch_size, request.mode)
+        # memo-key suffix: EvalCache entries are batch/mode/schedule-dependent
+        self._ck = (request.batch_size, request.mode, request.schedule,
+                    request.n_microbatches)
 
     # ------------------------------------------------------------- feasibility
     def segment_fits(self, node: str, lo: int, hi: int) -> bool:
@@ -159,7 +192,63 @@ class PlanEvaluator:
                     if self.request.mode == TR else None)
         return self.net.path_cost_breakdown(path, fw_bytes, bw_bytes)
 
+    def _cut_sizes(self, cut_after: int) -> tuple[float, float | None]:
+        b = self.request.batch_size
+        fw = b * self.profile.cut_bytes(cut_after, FW)
+        bw = (b * self.profile.cut_bytes(cut_after, BW)
+              if self.request.mode == TR else None)
+        return fw, bw
+
+    def plan_stage_times(self, plan: Plan) -> list[float]:
+        """Full-batch occupancy time of every pipeline *resource* of the plan:
+        the K hosting nodes (Eq. 17 compute) and each physical link of each
+        inter-stage subpath (transmission only — propagation occupies no
+        resource).  ``max(...)`` of these is the pipeline bottleneck tau."""
+        times = [self.segment_comp_s(node, lo, hi)
+                 for (lo, hi), node in zip(plan.segments, plan.placement)]
+        for k, path in enumerate(plan.paths):
+            fw, bw = self._cut_sizes(plan.segments[k][1])
+            for u, v in zip(path, path[1:]):
+                times.append(self.net.link_trans_s(u, v, fw, bw))
+        return times
+
+    def bottleneck_s(self, plan: Plan) -> float:
+        """tau: the slowest full-batch pipeline stage (node or link) of the plan."""
+        return max(self.plan_stage_times(plan))
+
+    def evaluate_pipelined(self, plan: Plan, n_microbatches: int) -> LatencyBreakdown:
+        """Pipelined latency (docs/pipeline.md): fill + (M-1)*tau/M.
+
+        Fill charges every stage its per-microbatch share t/M plus full
+        propagation on every link; the drain/bubble term is (M-1) steady-state
+        steps of the bottleneck stage.  With M = 1 every division is by 1 and
+        the bubble is exactly 0.0, so the result is bit-for-bit equal to the
+        sequential :meth:`evaluate`.
+        """
+        M = n_microbatches
+        out = LatencyBreakdown()
+        tau = 0.0
+        for (lo, hi), node in zip(plan.segments, plan.placement):
+            t = self.segment_comp_s(node, lo, hi)
+            out.computation_s += t / M
+            tau = max(tau, t)
+        for k, path in enumerate(plan.paths):
+            cut = plan.segments[k][1]
+            trans, prop = self.cut_transfer_s(path, cut)
+            out.transmission_s += trans / M
+            out.propagation_s += prop
+            fw, bw = self._cut_sizes(cut)
+            for u, v in zip(path, path[1:]):
+                tau = max(tau, self.net.link_trans_s(u, v, fw, bw))
+        if plan.tail_path:  # psi_K = 0: propagation only, reserves no stage
+            _, prop = self.net.path_cost_breakdown(plan.tail_path, 0.0, None)
+            out.propagation_s += prop
+        out.bubble_s = (M - 1) * tau / M
+        return out
+
     def evaluate(self, plan: Plan) -> LatencyBreakdown:
+        if self.request.schedule == PIPE:
+            return self.evaluate_pipelined(plan, self.request.microbatches())
         out = LatencyBreakdown()
         for (lo, hi), node in zip(plan.segments, plan.placement):
             out.computation_s += self.segment_comp_s(node, lo, hi)

@@ -11,8 +11,10 @@ Complexity O(K L^2) segment evaluations, per Sec. V-D.
 """
 from __future__ import annotations
 
-from .costmodel import BW, FW, TR, ModelProfile
-from .network import PhysicalNetwork
+import numpy as np
+
+from .costmodel import BW, FW, PIPE, TR, ModelProfile
+from .network import PhysicalNetwork, transmission_time_s
 from .plan import EvalCache, Plan, PlanEvaluator, ServiceChainRequest
 
 INF = float("inf")
@@ -48,7 +50,13 @@ def k_sequence_segmentation(
     plan: Plan,
     cache: EvalCache | None = None,
 ) -> list[tuple[int, int]] | None:
-    """Re-split L layers into K segments for plan's fixed placement/chaining."""
+    """Re-split L layers into K segments for plan's fixed placement/chaining.
+
+    Pipelined requests (schedule="pipe", M > 1) go through `_k_seq_pipe`,
+    which optimizes the pipelined objective (balanced stages beat
+    front-loaded ones once the bottleneck term dominates)."""
+    if request.schedule == PIPE and request.microbatches() > 1:
+        return _k_seq_pipe(net, profile, request, plan, cache)
     K, L = plan.K, profile.L
     ev = PlanEvaluator(net, profile, request, cache=cache)
     placement, paths = plan.placement, plan.paths
@@ -78,6 +86,128 @@ def k_sequence_segmentation(
     e = L
     for k in range(K, 1, -1):
         e = choice[k][e]
+        cuts.append(e)
+    cuts.reverse()
+    segments, lo = [], 1
+    for c in cuts + [L]:
+        segments.append((lo, c))
+        lo = c + 1
+    return segments
+
+
+def _k_seq_pipe(
+    net: PhysicalNetwork,
+    profile: ModelProfile,
+    request: ServiceChainRequest,
+    plan: Plan,
+    cache: EvalCache | None = None,
+) -> list[tuple[int, int]] | None:
+    """K-sequence segmentation under the pipelined objective (docs/pipeline.md).
+
+    For the fixed placement/chaining, stage times are the per-stage compute
+    plus each link's transmission of the stage's outgoing cut; the objective
+    fill + (M-1)/M * tau couples segments through the bottleneck tau, which a
+    plain min-sum DP cannot express.  We therefore run the DP *vectorized over
+    candidate bottleneck caps*: dp[k][e] is an array over caps tau (segments
+    slower than tau cost +inf), and the answer is the cap minimizing
+    dp[K][L][tau] + (M-1)/M * tau.  The optimum's bottleneck is always one of
+    the finitely many candidate stage-time values, so the scan is exact for
+    this block.  O(K L^2) transitions, each an O(|taus|) NumPy op.
+    """
+    K, L = plan.K, profile.L
+    ev = PlanEvaluator(net, profile, request, cache=cache)
+    placement, paths = plan.placement, plan.paths
+    M = request.microbatches()
+    inv_M = 1.0 / M
+    c_bub = (M - 1) / M
+    b = request.batch_size
+    training = request.mode == TR
+
+    # full-batch compute per (stage, lo, hi); +inf where capacity-infeasible
+    comp = np.full((K, L + 1, L + 1), INF)
+    for k in range(K):
+        node = placement[k]
+        lo_min, hi_max = k + 1, L - (K - 1 - k)
+        for lo in range(lo_min, hi_max + 1):
+            for hi in range(lo, hi_max + 1):
+                if ev.segment_fits(node, lo, hi):
+                    comp[k, lo, hi] = ev.segment_comp_s(node, lo, hi)
+
+    # shipping along the existing (k)-th subpath, tabulated per cut position c:
+    # total link transmission (fill), slowest single link (bottleneck), and the
+    # cut-independent propagation sum
+    fw_b = np.array([b * profile.cut_bytes(c, FW) for c in range(1, L)])
+    bw_b = (np.array([b * profile.cut_bytes(c, BW) for c in range(1, L)])
+            if training else None)
+    ship_sum = np.zeros((max(K - 1, 1), L + 1))
+    ship_max = np.zeros((max(K - 1, 1), L + 1))
+    ship_prop = np.zeros(max(K - 1, 1))
+    for k in range(K - 1):
+        for u, v in zip(paths[k], paths[k][1:]):
+            spec = net.links[(u, v)]
+            t = transmission_time_s(fw_b, spec.bw_fw)
+            ship_prop[k] += spec.delay_fw
+            if bw_b is not None:
+                t = t + transmission_time_s(bw_b, spec.bw_bw)
+                ship_prop[k] += spec.delay_bw
+            ship_sum[k, 1:L] += t
+            ship_max[k, 1:L] = np.maximum(ship_max[k, 1:L], t)
+
+    # candidate bottleneck caps: every stage time any segmentation can exhibit
+    per_stage_min = []
+    for k in range(K):
+        fin = comp[k][np.isfinite(comp[k])]
+        if fin.size == 0:
+            return None  # stage k fits nowhere for any segment
+        per_stage_min.append(float(fin.min()))
+    lb = max(per_stage_min)
+    tau_set = set(comp[np.isfinite(comp)].tolist())
+    for k in range(K - 1):
+        tau_set.update(ship_max[k, 1:L].tolist())
+    taus = np.array(sorted(t for t in tau_set if t >= lb))
+    if taus.size == 0:
+        return None
+    T = taus.size
+
+    def seg_cost(k0: int, lo: int, hi: int):
+        """(fill, stage max) of zero-based stage k0 hosting [lo, hi]."""
+        c = comp[k0, lo, hi]
+        if c == INF:
+            return None
+        fill = c * inv_M
+        smax = c
+        if k0 < K - 1:
+            fill += ship_sum[k0, hi] * inv_M + ship_prop[k0]
+            smax = max(smax, ship_max[k0, hi])
+        return fill, smax
+
+    dp = np.full((K + 1, L + 1, T), INF)
+    choice = np.full((K + 1, L + 1, T), -1, dtype=np.int32)
+    for e in range(1, L - K + 2):
+        sc = seg_cost(0, 1, e)
+        if sc is not None:
+            dp[1, e] = np.where(taus >= sc[1], sc[0], INF)
+    for k in range(2, K + 1):
+        e_vals = range(k, L - K + k + 1) if k < K else [L]
+        for e in e_vals:
+            for e2 in range(k - 1, e):
+                sc = seg_cost(k - 1, e2 + 1, e)
+                if sc is None:
+                    continue
+                cand = dp[k - 1, e2] + np.where(taus >= sc[1], sc[0], INF)
+                better = cand < dp[k, e]
+                if better.any():
+                    dp[k, e][better] = cand[better]
+                    choice[k, e][better] = e2
+
+    tot = dp[K, L] + c_bub * taus
+    t_idx = int(np.argmin(tot))
+    if not np.isfinite(tot[t_idx]):
+        return None
+    cuts = []
+    e = L
+    for k in range(K, 1, -1):
+        e = int(choice[k, e, t_idx])
         cuts.append(e)
     cuts.reverse()
     segments, lo = [], 1

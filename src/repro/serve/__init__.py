@@ -13,11 +13,11 @@ from .planner import (SOLVERS, ServedRequest, ServeOutcome, ServePlanner,
                       replay_verify)
 from .policies import POLICIES, POLICY_NAMES
 from .requests import ARRIVALS, BATCH_SPREAD, ServeRequest, generate_fleet
-from .residual import PlanDemand, ResidualState, plan_demand
+from .residual import PlanDemand, ResidualState, effective_rate_rps, plan_demand
 
 __all__ = [
     "ARRIVALS", "BATCH_SPREAD", "POLICIES", "POLICY_NAMES", "SOLVERS",
     "PlanDemand", "ResidualState", "ServeOutcome", "ServePlanner",
-    "ServeRequest", "ServedRequest", "generate_fleet", "plan_demand",
-    "replay_verify",
+    "ServeRequest", "ServedRequest", "effective_rate_rps", "generate_fleet",
+    "plan_demand", "replay_verify",
 ]

@@ -39,12 +39,21 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--arrival", default="batch", choices=ARRIVALS)
     ap.add_argument("--rate-rps", type=float, default=1.0,
                     help="sustained chain executions/s per request (bandwidth demand)")
+    ap.add_argument("--schedule", default="seq", choices=("seq", "pipe"),
+                    help="execution schedule: seq (paper) or pipe "
+                         "(microbatched pipeline, docs/pipeline.md)")
+    ap.add_argument("--n-microbatches", type=int, default=1,
+                    help="pipeline depth M for --schedule pipe")
     ap.add_argument("--policy", default="fcfs", choices=POLICY_NAMES)
     ap.add_argument("--solver", default="bcd", choices=sorted(SOLVERS))
     ap.add_argument("--no-replan", action="store_true",
                     help="disable capacity-aware replanning on rejection")
     ap.add_argument("--json", default=None, help="write summary + records here")
     args = ap.parse_args(argv)
+    if (args.solver == "ilp" and args.schedule == "pipe"
+            and args.n_microbatches > 1):
+        ap.error("--solver ilp models --schedule seq only; "
+                 "use exact or bcd for pipelined fleets")
 
     from repro.sweep.spec import build_profile, build_topology
 
@@ -56,7 +65,8 @@ def main(argv: list[str] | None = None) -> int:
     fleet = generate_fleet(
         net, args.n_requests, args.source, args.destination, args.batch_size,
         args.mode, args.K, seed=args.seed, arrival=args.arrival,
-        rate_rps=args.rate_rps, model_id=args.profile)
+        rate_rps=args.rate_rps, model_id=args.profile,
+        schedule=args.schedule, n_microbatches=args.n_microbatches)
     planner = ServePlanner(net, profile, solver=args.solver,
                            replan=not args.no_replan)
     outcome = planner.admit(fleet, policy=args.policy)

@@ -61,6 +61,8 @@ class ServedRequest:
             "arrival_s": r.arrival_s,
             "rate_rps": r.rate_rps,
             "model_id": r.model_id,
+            "schedule": r.schedule,
+            "n_microbatches": r.n_microbatches,
             "accepted": self.accepted,
             "replanned": self.replanned,
             "latency_s": self.latency_s,
@@ -81,7 +83,8 @@ class ServedRequest:
             mode=d["mode"], K=d["K"],
             candidates=tuple(tuple(c) for c in d["candidates"]),
             arrival_s=d["arrival_s"], rate_rps=d["rate_rps"],
-            model_id=d["model_id"])
+            model_id=d["model_id"], schedule=d.get("schedule", "seq"),
+            n_microbatches=d.get("n_microbatches", 1))
         plan = None
         if "segments" in d:
             plan = Plan(segments=[tuple(s) for s in d["segments"]],

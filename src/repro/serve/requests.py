@@ -11,8 +11,8 @@ from __future__ import annotations
 import random
 from dataclasses import dataclass, field
 
-from repro.core import (IF, TR, PhysicalNetwork, ServiceChainRequest,
-                        candidate_sets)
+from repro.core import (IF, SCHEDULES, SEQ, TR, PhysicalNetwork,
+                        ServiceChainRequest, candidate_sets)
 
 
 @dataclass(frozen=True)
@@ -29,15 +29,21 @@ class ServeRequest:
     arrival_s: float = 0.0
     rate_rps: float = 1.0  # sustained chain executions per second
     model_id: str = "model"
+    schedule: str = SEQ  # seq | pipe (see docs/pipeline.md)
+    n_microbatches: int = 1
 
     def __post_init__(self) -> None:
         assert self.mode in (IF, TR)
         assert len(self.candidates) == self.K
         assert self.rate_rps > 0
+        assert self.schedule in SCHEDULES
+        assert self.n_microbatches >= 1
 
     def chain_request(self) -> ServiceChainRequest:
         return ServiceChainRequest(self.model_id, self.source, self.destination,
-                                   self.batch_size, self.mode)
+                                   self.batch_size, self.mode,
+                                   schedule=self.schedule,
+                                   n_microbatches=self.n_microbatches)
 
     def candidate_lists(self) -> list[list[str]]:
         return [list(c) for c in self.candidates]
@@ -46,7 +52,7 @@ class ServeRequest:
         """Requests sharing this key are the same planning problem — the
         planner pre-solves each distinct key once per admission round."""
         return (self.source, self.destination, self.batch_size, self.mode,
-                self.K, self.candidates)
+                self.K, self.candidates, self.schedule, self.n_microbatches)
 
 
 # The deterministic batch-size spread applied across a generated fleet (cycled
@@ -72,6 +78,8 @@ def generate_fleet(
     candidates_per_stage: int = 2,
     model_id: str = "model",
     batch_spread: tuple[int, ...] = BATCH_SPREAD,
+    schedule: str = SEQ,
+    n_microbatches: int = 1,
 ) -> list[ServeRequest]:
     """Deterministic seeded fleet of `n_requests` chains on one fabric.
 
@@ -105,5 +113,7 @@ def generate_fleet(
             arrival_s=t,
             rate_rps=rate_rps,
             model_id=model_id,
+            schedule=schedule,
+            n_microbatches=n_microbatches,
         ))
     return fleet

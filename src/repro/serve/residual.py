@@ -6,7 +6,12 @@ Accepted chains consume fabric capacity:
   ``b * delta_cut`` bytes per execution across every link of the cut's
   subpath, i.e. a sustained flow of ``b * delta * 8 * rate`` bits/s, charged
   against the link's forward rate (and its backward rate for the gradient
-  flow when training, per the paper's R^BW_{i,j} convention);
+  flow when training, per the paper's R^BW_{i,j} convention).  *Pipelined*
+  chains reserve their **steady-state occupancy** instead: a full pipeline
+  streams one batch per bottleneck-stage period tau, so it can never ship
+  faster than ``b * delta * 8 / tau`` bits/s — the effective reserved rate is
+  ``min(rate_rps, 1/tau)``, which admits heavily-loaded pipelined chains where
+  the naive accounting would reserve an unattainable flow (docs/pipeline.md);
 * **node memory / disk** — a placed sub-model [lo, hi] holds its parameters
   plus the batch-scaled peak smashed data in memory (exactly the left side of
   constraints (14)-(15)) for as long as the chain is admitted.
@@ -23,8 +28,8 @@ from __future__ import annotations
 from collections import defaultdict
 from dataclasses import dataclass, field
 
-from repro.core import (BW, FW, TR, LinkSpec, ModelProfile, NodeSpec,
-                        PhysicalNetwork, Plan)
+from repro.core import (BW, FW, TR, EvalCache, LinkSpec, ModelProfile,
+                        NodeSpec, PhysicalNetwork, Plan, PlanEvaluator)
 
 from .requests import ServeRequest
 
@@ -51,17 +56,47 @@ class PlanDemand:
     node_disk_bytes: dict[str, float]
 
 
+def effective_rate_rps(profile: ModelProfile, request: ServeRequest,
+                       plan: Plan, net: PhysicalNetwork,
+                       cache: EvalCache | None = None) -> float:
+    """The execution rate a chain's bandwidth reservation is based on.
+
+    Sequential chains reserve the requested sustained rate.  A pipelined chain
+    (M > 1) streams microbatches through its bottleneck stage tau, completing
+    at most one batch per tau seconds regardless of M, so its steady-state
+    link occupancy corresponds to ``min(rate_rps, 1/tau)`` — reserving more
+    would hold bandwidth the chain can physically never use.  tau is computed
+    against the *base* fabric's compute/link models so the reservation is
+    stable across residual views."""
+    chain = request.chain_request()
+    if chain.microbatches() <= 1:
+        return request.rate_rps
+    tau = PlanEvaluator(net, profile, chain, cache=cache).bottleneck_s(plan)
+    if tau <= 0.0:
+        return request.rate_rps
+    return min(request.rate_rps, 1.0 / tau)
+
+
 def plan_demand(profile: ModelProfile, request: ServeRequest,
-                plan: Plan) -> PlanDemand:
-    """Per-link flow (bits/s) and per-node memory/disk (bytes) of a plan."""
+                plan: Plan, net: PhysicalNetwork | None = None,
+                cache: EvalCache | None = None) -> PlanDemand:
+    """Per-link flow (bits/s) and per-node memory/disk (bytes) of a plan.
+
+    ``net`` enables the pipelined steady-state occupancy rate
+    (:func:`effective_rate_rps`); without it the requested rate is reserved
+    (the sequential behaviour).  ``cache`` collapses the repeated
+    segment-compute lookups behind the bottleneck computation across the many
+    fits/commit/conservation calls of an admission round."""
     b = request.batch_size
     training = request.mode == TR
+    rate = (effective_rate_rps(profile, request, plan, net, cache)
+            if net is not None else request.rate_rps)
     link_fw: dict[tuple[str, str], float] = defaultdict(float)
     link_bw: dict[tuple[str, str], float] = defaultdict(float)
     for k, path in enumerate(plan.paths):
         cut = plan.segments[k][1]
-        fw_bps = b * profile.cut_bytes(cut, FW) * 8.0 * request.rate_rps
-        bw_bps = (b * profile.cut_bytes(cut, BW) * 8.0 * request.rate_rps
+        fw_bps = b * profile.cut_bytes(cut, FW) * 8.0 * rate
+        bw_bps = (b * profile.cut_bytes(cut, BW) * 8.0 * rate
                   if training else 0.0)
         for u, v in zip(path, path[1:]):
             link_fw[(u, v)] += fw_bps
@@ -90,12 +125,15 @@ class ResidualState:
     used_mem: dict[str, float] = field(default_factory=lambda: defaultdict(float))
     used_disk: dict[str, float] = field(default_factory=lambda: defaultdict(float))
     committed: list[tuple[ServeRequest, Plan]] = field(default_factory=list)
+    # shared compute-time memo for the pipelined bottleneck lookups behind
+    # plan_demand — one cache per fabric state, reused across the whole round
+    eval_cache: EvalCache = field(default_factory=EvalCache, repr=False)
 
     # ---------------------------------------------------------------- queries
     def fits(self, profile: ModelProfile, request: ServeRequest,
              plan: Plan) -> bool:
         """Would committing `plan` keep every link/node within capacity?"""
-        d = plan_demand(profile, request, plan)
+        d = plan_demand(profile, request, plan, self.base, self.eval_cache)
         for (u, v), f in d.link_fw_bps.items():
             spec = self.base.links[(u, v)]
             if not _fits_cap(self.used_link_fw[(u, v)] + f, spec.bw_fw):
@@ -115,7 +153,7 @@ class ResidualState:
 
     def commit(self, profile: ModelProfile, request: ServeRequest,
                plan: Plan) -> None:
-        d = plan_demand(profile, request, plan)
+        d = plan_demand(profile, request, plan, self.base, self.eval_cache)
         for k, f in d.link_fw_bps.items():
             self.used_link_fw[k] += f
         for k, g in d.link_bw_bps.items():
@@ -172,7 +210,7 @@ class ResidualState:
         mem: dict[str, float] = defaultdict(float)
         disk: dict[str, float] = defaultdict(float)
         for request, plan in self.committed:
-            d = plan_demand(profile, request, plan)
+            d = plan_demand(profile, request, plan, self.base, self.eval_cache)
             for k, f in d.link_fw_bps.items():
                 fw[k] += f
             for k, g in d.link_bw_bps.items():

@@ -11,15 +11,18 @@ import json
 import time
 from pathlib import Path
 
-from .report import comparison_report
+from .report import comparison_report, schedule_pairs
 from .runner import ScenarioResult
 from .spec import SUITE_SCHEMA_VERSION
 
 CSV_FIELDS = [
     "scenario_id", "suite", "figure", "cell", "topology", "profile", "mode",
-    "K", "batch_size", "solver", "candidate_seed", "feasible", "latency_s",
-    "computation_s", "transmission_s", "propagation_s", "wall_time_s",
-    "iterations", "from_cache",
+    "K", "batch_size", "schedule", "n_microbatches", "solver",
+    "candidate_seed", "feasible", "latency_s",
+    "computation_s", "transmission_s", "propagation_s", "bubble_s",
+    # seq-vs-pipe pairing (pipe rows with a feasible seq counterpart only)
+    "seq_latency_s", "pipe_speedup",
+    "wall_time_s", "iterations", "from_cache",
     # serve-layer (fleet) columns; empty for single-chain scenarios
     "n_requests", "policy", "arrival", "n_accepted", "acceptance_ratio",
     "latency_p50_s", "latency_p95_s", "latency_p99_s",
@@ -48,11 +51,13 @@ def write_artifacts(out_dir: str | Path, suite_name: str,
     json_path.write_text(json.dumps(doc, indent=1))
 
     csv_path = out / f"{suite_name}.csv"
+    pairs = schedule_pairs(results)
     with csv_path.open("w", newline="") as fh:
         w = csv.DictWriter(fh, fieldnames=CSV_FIELDS)
         w.writeheader()
         for r in results:
             s = r.spec
+            pair = pairs.get(s.scenario_id())
             w.writerow({
                 "scenario_id": s.scenario_id(),
                 "suite": s.tags.get("suite", suite_name),
@@ -63,6 +68,8 @@ def write_artifacts(out_dir: str | Path, suite_name: str,
                 "mode": s.mode,
                 "K": s.K,
                 "batch_size": s.batch_size,
+                "schedule": s.schedule,
+                "n_microbatches": s.n_microbatches,
                 "solver": s.solver,
                 "candidate_seed": s.candidate_seed,
                 "feasible": r.feasible,
@@ -70,6 +77,9 @@ def write_artifacts(out_dir: str | Path, suite_name: str,
                 "computation_s": r.computation_s,
                 "transmission_s": r.transmission_s,
                 "propagation_s": r.propagation_s,
+                "bubble_s": _opt(r.bubble_s),
+                "seq_latency_s": _opt(pair["seq_latency_s"] if pair else None),
+                "pipe_speedup": _opt(pair["speedup"] if pair else None),
                 "wall_time_s": r.wall_time_s,
                 "iterations": r.iterations,
                 "from_cache": r.from_cache,

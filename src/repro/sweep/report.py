@@ -6,6 +6,13 @@ the best optimal-class solver present (``exact`` or ``ilp``, else the group's
 best latency): optimality gap in % and wall-time speedup.  A scheme is on the
 group's Pareto front if no other scheme is at least as good on both latency
 and solver wall time and strictly better on one.
+
+Scenarios sharing a :meth:`ScenarioSpec.schedule_key` (same instance, same
+solver, different execution schedule) are additionally paired seq-vs-pipe:
+each pipelined scenario gets its sequential counterpart's latency and the
+speedup ``seq / pipe`` — the headline number of the pipelined execution model
+(docs/pipeline.md), which is >= 1 by construction (the pipelined schedule can
+always execute the sequential plan).
 """
 from __future__ import annotations
 
@@ -14,6 +21,36 @@ from collections import defaultdict
 from .runner import ScenarioResult
 
 OPTIMAL_SOLVERS = ("exact", "ilp")
+
+
+def schedule_pairs(results: list[ScenarioResult]) -> dict[str, dict]:
+    """Map each *pipe* scenario id to its seq counterpart's latency + speedup.
+
+    Pairing key is :meth:`ScenarioSpec.schedule_key` — only feasible
+    single-chain pairs are reported.  Returned rows carry
+    ``seq_latency_s`` / ``pipe_latency_s`` / ``speedup`` plus labels.
+    """
+    seq_by_key: dict[str, ScenarioResult] = {}
+    for r in results:
+        if r.spec.schedule == "seq" and r.spec.n_requests == 1 and r.feasible:
+            seq_by_key[r.spec.schedule_key()] = r
+    pairs: dict[str, dict] = {}
+    for r in results:
+        if r.spec.schedule != "pipe" or r.spec.n_requests != 1 or not r.feasible:
+            continue
+        seq = seq_by_key.get(r.spec.schedule_key())
+        if seq is None or not seq.latency_s:
+            continue
+        pairs[r.spec.scenario_id()] = {
+            "cell": r.spec.tags.get("cell", ""),
+            "solver": r.spec.solver,
+            "n_microbatches": r.spec.n_microbatches,
+            "seq_latency_s": seq.latency_s,
+            "pipe_latency_s": r.latency_s,
+            "bubble_s": r.bubble_s,
+            "speedup": seq.latency_s / r.latency_s,
+        }
+    return pairs
 
 
 def _pareto(points: list[tuple[str, float, float]]) -> set[str]:
@@ -111,7 +148,20 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
             "mean_acceptance_ratio": (a["accept_sum"] / a["n_accept"]
                                       if a["n_accept"] else None),
         }
-    return {"n_groups": len(per_group), "summary": summary, "groups": per_group}
+
+    pairs = schedule_pairs(results)
+    schedule_cmp = None
+    if pairs:
+        sp = [p["speedup"] for p in pairs.values()]
+        schedule_cmp = {
+            "n_pairs": len(sp),
+            "mean_speedup": sum(sp) / len(sp),
+            "min_speedup": min(sp),
+            "max_speedup": max(sp),
+            "pairs": pairs,
+        }
+    return {"n_groups": len(per_group), "summary": summary,
+            "schedule_comparison": schedule_cmp, "groups": per_group}
 
 
 def format_report(report: dict) -> str:
@@ -127,4 +177,17 @@ def format_report(report: dict) -> str:
                else f"{s['mean_acceptance_ratio']:.2f}")
         lines.append(f"{solver:<10} {s['n_feasible']:>4}/{s['n']:<4} {gap:>10} "
                      f"{mgap:>10} {spd:>9} {s['pareto_count']:>7} {acc:>7}")
+    sc = report.get("schedule_comparison")
+    if sc:
+        lines.append(
+            f"seq-vs-pipe: {sc['n_pairs']} pairs, speedup "
+            f"mean {sc['mean_speedup']:.2f}x, min {sc['min_speedup']:.2f}x, "
+            f"max {sc['max_speedup']:.2f}x")
+        by_m: dict[int, list[float]] = {}
+        for p in sc["pairs"].values():
+            by_m.setdefault(p["n_microbatches"], []).append(p["speedup"])
+        for m in sorted(by_m):
+            sp = by_m[m]
+            lines.append(f"  M={m:<4} {len(sp):>3} pairs, "
+                         f"mean speedup {sum(sp) / len(sp):.2f}x")
     return "\n".join(lines)

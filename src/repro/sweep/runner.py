@@ -47,6 +47,7 @@ class ScenarioResult:
     computation_s: float | None = None
     transmission_s: float | None = None
     propagation_s: float | None = None
+    bubble_s: float | None = None  # pipeline drain term; None/0 for seq
     wall_time_s: float = 0.0
     iterations: int = 0
     segments: list | None = None
@@ -161,6 +162,7 @@ def run_scenario(spec: ScenarioSpec, use_context_cache: bool = True) -> Scenario
         computation_s=lb.computation_s,
         transmission_s=lb.transmission_s,
         propagation_s=lb.propagation_s,
+        bubble_s=lb.bubble_s,
         wall_time_s=res.wall_time_s,
         iterations=res.iterations,
         segments=[list(s) for s in p.segments],

@@ -14,6 +14,9 @@ from dataclasses import asdict, dataclass, field
 
 from repro.core import (
     IF,
+    PIPE,
+    SCHEDULES,
+    SEQ,
     SOLVERS,
     TR,
     LinkSpec,
@@ -21,6 +24,7 @@ from repro.core import (
     PhysicalNetwork,
     ServiceChainRequest,
     candidate_sets,
+    effective_microbatches,
     nsfnet,
     random_network,
     resnet101_profile,
@@ -29,7 +33,7 @@ from repro.core import (
 from repro.serve.policies import POLICY_NAMES
 from repro.serve.requests import ARRIVALS
 
-SUITE_SCHEMA_VERSION = 2
+SUITE_SCHEMA_VERSION = 3  # v3: schedule/n_microbatches spec fields + seq-vs-pipe report
 
 SOLVER_NAMES = tuple(SOLVERS)  # the single registry lives in repro.core
 
@@ -118,6 +122,8 @@ class ScenarioSpec:
     batch_size: int = 1
     mode: str = IF
     K: int = 3
+    schedule: str = SEQ  # seq | pipe — the execution model (docs/pipeline.md)
+    n_microbatches: int = 1  # pipeline depth M for schedule="pipe"
     solver: str = "bcd"
     solver_kwargs: dict = field(default_factory=dict)
     candidates: list | None = None  # pinned V^k sets; None -> seeded policy
@@ -137,6 +143,14 @@ class ScenarioSpec:
             raise ValueError(f"mode must be IF|TR, got {self.mode!r}")
         if self.solver not in SOLVER_NAMES:
             raise ValueError(f"solver must be one of {SOLVER_NAMES}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"schedule must be one of {SCHEDULES}")
+        if self.n_microbatches < 1:
+            raise ValueError("n_microbatches must be >= 1")
+        if (self.solver == "ilp" and self.schedule == PIPE
+                and effective_microbatches(self.batch_size,
+                                           self.n_microbatches) > 1):
+            raise ValueError("the ilp solver models schedule='seq' only")
         if self.n_requests < 1:
             raise ValueError("n_requests must be >= 1")
         if self.arrival not in ARRIVALS:
@@ -166,9 +180,10 @@ class ScenarioSpec:
         return hashlib.sha256(self.key().encode()).hexdigest()[:16]
 
     def scenario_id(self) -> str:
+        sched = f"_pipeM{self.n_microbatches}" if self.schedule == PIPE else ""
         return self.name or (
             f"{self.topology}_{self.profile}_{self.mode}_K{self.K}"
-            f"_b{self.batch_size}_{self.solver}_s{self.candidate_seed}"
+            f"_b{self.batch_size}{sched}_{self.solver}_s{self.candidate_seed}"
             f"_{self.spec_hash()[:6]}"
         )
 
@@ -177,6 +192,15 @@ class ScenarioSpec:
         group key are the same problem instance solved by different schemes."""
         d = self.to_dict()
         for f in ("name", "tags", "solver", "solver_kwargs"):
+            d.pop(f, None)
+        return json.dumps(d, sort_keys=True, separators=(",", ":"))
+
+    def schedule_key(self) -> str:
+        """Canonical key of everything *except* the schedule — a pipe scenario
+        and its seq counterpart (same instance, same solver) share this key,
+        which is what the seq-vs-pipe speedup report pairs on."""
+        d = self.to_dict()
+        for f in ("name", "tags", "schedule", "n_microbatches"):
             d.pop(f, None)
         return json.dumps(d, sort_keys=True, separators=(",", ":"))
 
@@ -198,7 +222,9 @@ class ScenarioSpec:
 
     def request(self) -> ServiceChainRequest:
         return ServiceChainRequest(self.profile, self.source, self.destination,
-                                   self.batch_size, self.mode)
+                                   self.batch_size, self.mode,
+                                   schedule=self.schedule,
+                                   n_microbatches=self.n_microbatches)
 
     def build_fleet(self, net: PhysicalNetwork):
         """The seeded request fleet of a serve scenario (n_requests > 1)."""
@@ -209,4 +235,5 @@ class ScenarioSpec:
             self.batch_size, self.mode, self.K, seed=self.candidate_seed,
             arrival=self.arrival, candidates=self.candidates,
             candidates_per_stage=self.candidates_per_stage,
-            model_id=self.profile)
+            model_id=self.profile, schedule=self.schedule,
+            n_microbatches=self.n_microbatches)

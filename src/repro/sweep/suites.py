@@ -154,6 +154,41 @@ def nsfnet_faults(quick: bool = False) -> list[ScenarioSpec]:
     return specs
 
 
+def nsfnet_pipeline(quick: bool = False,
+                    microbatches: tuple[int, ...] | None = None,
+                    schemes: tuple[str, ...] = ("bcd",)) -> list[ScenarioSpec]:
+    """Seq-vs-pipe grid on NSFNET: every cell is solved once under the paper's
+    sequential schedule and once per pipeline depth M (docs/pipeline.md).
+
+    Pipe scenarios use BCD (schedule-aware, seq-anchored, so pipe <= seq per
+    pair by construction); the seq side additionally runs ``exact`` as the
+    optimality reference.  The report's ``schedule_comparison`` section and the
+    CSV's ``seq_latency_s`` / ``pipe_speedup`` columns come from this pairing.
+    The exact pipelined joint DP is a small-instance parity oracle (its
+    bottleneck-cap scan multiplies the DP cost), so it is deliberately not
+    swept here.
+    """
+    if microbatches is None:
+        microbatches = (1, 4, 16) if quick else (1, 2, 4, 8, 16, 32)
+    ks = [3] if quick else [3, 5]
+    cells = [(IF, 32), (TR, 128)]
+    seeds = 1 if quick else 3
+    specs = []
+    for K in ks:
+        for mode, b in cells:
+            for seed in range(seeds):
+                tags = {"suite": "nsfnet_pipeline",
+                        "cell": f"K{K}_b{b}_{mode}", "seed": seed}
+                for solver in dict.fromkeys(("exact",) + tuple(schemes)):
+                    specs.append(_nsfnet_spec(mode, K, b, solver, seed, tags))
+                for solver in schemes:
+                    for M in microbatches:
+                        specs.append(_nsfnet_spec(
+                            mode, K, b, solver, seed, tags,
+                            schedule="pipe", n_microbatches=M))
+    return specs
+
+
 def nsfnet_multirequest(quick: bool = False,
                         policies: tuple[str, ...] = ("fcfs", "latency-greedy",
                                                      "batch-desc"),
@@ -211,6 +246,7 @@ SUITES = {
     "random_scaling": random_scaling,
     "tpu_pod": tpu_pod,
     "nsfnet_faults": nsfnet_faults,
+    "nsfnet_pipeline": nsfnet_pipeline,
     "nsfnet_multirequest": nsfnet_multirequest,
     "random_load_scaling": random_load_scaling,
 }

@@ -1,0 +1,385 @@
+"""Pipelined execution model (docs/pipeline.md): evaluator properties
+(M=1 bit-for-bit sequential, pipe <= seq, monotone in M), solver exactness
+(exact-pipe == brute force on tiny instances), BCD-pipe parity, serve-layer
+steady-state occupancy accounting, and the nsfnet_pipeline sweep invariants."""
+import itertools
+import random
+from dataclasses import replace
+
+import pytest
+
+from repro.core import (
+    IF,
+    TR,
+    ComputeModel,
+    LayerProfile,
+    LinkSpec,
+    ModelProfile,
+    NodeSpec,
+    PhysicalNetwork,
+    PlanEvaluator,
+    ServiceChainRequest,
+    bcd_solve,
+    exact_solve,
+    ilp_solve,
+    nsfnet,
+    resnet101_profile,
+)
+
+GB = 1024**3
+
+
+def _random_instance(seed: int, n_nodes: int = 6, L: int = 6, K: int = 3,
+                     chord_p: float = 0.4):
+    rng = random.Random(seed)
+    net = PhysicalNetwork()
+    names = [f"n{i}" for i in range(n_nodes)]
+    for i, name in enumerate(names):
+        cm = ComputeModel(name=f"dev{i}",
+                          pieces=((float("inf"), rng.uniform(1e-12, 2e-10), 1e-12),),
+                          alpha_tau=rng.choice([0.0, 2e-13]), beta_tau=0.0)
+        cap = rng.uniform(0.4, 4.0) * GB
+        net.add_node(NodeSpec(name, cm, cap, cap))
+    edges = {(i, (i + 1) % n_nodes) for i in range(n_nodes)}
+    for i in range(n_nodes):
+        for j in range(i + 1, n_nodes):
+            if rng.random() < chord_p:
+                edges.add((i, j))
+    for i, j in edges:
+        d = rng.uniform(1e-3, 15e-3)
+        bw = rng.choice([0.5e9, 1e9, 2e9])
+        net.add_bidirectional(names[i], names[j], LinkSpec(bw, bw, d, d))
+    layers = []
+    for l in range(L):
+        fw = rng.uniform(0.1, 8.0) * 1e9
+        act = rng.uniform(0.01, 3.0) * 1e6
+        mem = rng.uniform(1, 300) * 1e6
+        layers.append(LayerProfile(f"l{l}", fw, 2 * fw, act, act, mem, mem))
+    prof = ModelProfile("rand", layers)
+    s, d = names[0], names[-1]
+    mids = names[1:-1]
+    cands = [[s]] + [rng.sample(mids, k=min(2, len(mids))) for _ in range(K - 2)] + [[d]]
+    mode = rng.choice([IF, TR])
+    b = rng.choice([8, 32, 128])
+    req = ServiceChainRequest("rand", s, d, b, mode)
+    return net, prof, req, K, cands
+
+
+def _pipe(req: ServiceChainRequest, M: int) -> ServiceChainRequest:
+    return replace(req, schedule="pipe", n_microbatches=M)
+
+
+# --------------------------------------------------- evaluator: M=1 bit-for-bit
+def test_pipe_m1_evaluator_bitforbit_nsfnet():
+    """Acceptance criterion: the pipelined evaluator with n_microbatches=1 is
+    *bit-for-bit* equal to the sequential evaluator on paper-grid plans."""
+    net = nsfnet(source="v4")
+    prof = resnet101_profile()
+    for mode, b, K in [(IF, 2, 3), (IF, 64, 4), (TR, 128, 3), (TR, 8, 5)]:
+        cands = ([["v4"]] + [["v7", "v11"], ["v9", "v2"], ["v5", "v12"]][: K - 2]
+                 + [["v13"]])
+        req = ServiceChainRequest("resnet101", "v4", "v13", b, mode)
+        for solver in (exact_solve, bcd_solve):
+            res = solver(net, prof, req, K, cands)
+            assert res.feasible
+            seq_lb = PlanEvaluator(net, prof, req).evaluate(res.plan)
+            ev1 = PlanEvaluator(net, prof, _pipe(req, 1))
+            pipe_lb = ev1.evaluate(res.plan)
+            assert pipe_lb.computation_s == seq_lb.computation_s
+            assert pipe_lb.transmission_s == seq_lb.transmission_s
+            assert pipe_lb.propagation_s == seq_lb.propagation_s
+            assert pipe_lb.bubble_s == 0.0
+            assert pipe_lb.total_s == seq_lb.total_s
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pipe_m1_evaluator_bitforbit_random(seed):
+    net, prof, req, K, cands = _random_instance(seed)
+    res = exact_solve(net, prof, req, K, cands)
+    if not res.feasible:
+        return
+    seq = PlanEvaluator(net, prof, req).latency_s(res.plan)
+    pipe1 = PlanEvaluator(net, prof, _pipe(req, 1)).latency_s(res.plan)
+    assert pipe1 == seq
+
+
+@pytest.mark.parametrize("solver", [exact_solve, bcd_solve])
+def test_pipe_m1_solver_bitforbit(solver):
+    """Solvers treat M=1 as the sequential special case exactly."""
+    net = nsfnet(source="v4")
+    prof = resnet101_profile()
+    cands = [["v4"], ["v7", "v11"], ["v13"]]
+    for mode, b in [(IF, 32), (TR, 128)]:
+        req = ServiceChainRequest("resnet101", "v4", "v13", b, mode)
+        seq = solver(net, prof, req, 3, cands)
+        p1 = solver(net, prof, _pipe(req, 1), 3, cands)
+        assert p1.latency_s == seq.latency_s
+        assert p1.plan.segments == seq.plan.segments
+        assert p1.plan.placement == seq.plan.placement
+
+
+# -------------------------------------------- pipe <= seq and monotone in M
+@pytest.mark.parametrize("seed", range(10))
+def test_pipe_leq_seq_and_monotone_in_M(seed):
+    """For any fixed plan, pipelined latency is <= sequential for every M >= 1
+    and non-increasing in M (the bottleneck can't exceed the stage-time sum)."""
+    net, prof, req, K, cands = _random_instance(seed, n_nodes=7, L=8, K=3)
+    res = bcd_solve(net, prof, req, K, cands)
+    if not res.feasible:
+        return
+    seq = PlanEvaluator(net, prof, req).latency_s(res.plan)
+    prev = seq
+    for M in (1, 2, 3, 4, 8, 16, 64):
+        lat = PlanEvaluator(net, prof, _pipe(req, M)).latency_s(res.plan)
+        assert lat <= seq * (1 + 1e-12)
+        assert lat <= prev * (1 + 1e-12)
+        prev = lat
+
+
+def test_bubble_matches_bottleneck_formula():
+    net, prof, req, K, cands = _random_instance(1, n_nodes=7, L=8, K=3)
+    res = exact_solve(net, prof, req, K, cands)
+    assert res.feasible
+    for M in (2, 8):
+        ev = PlanEvaluator(net, prof, _pipe(req, M))
+        lb = ev.evaluate(res.plan)
+        tau = ev.bottleneck_s(res.plan)
+        assert lb.bubble_s == pytest.approx((M - 1) * tau / M, rel=1e-12)
+        assert lb.total_s == pytest.approx(
+            lb.computation_s + lb.transmission_s + lb.propagation_s + lb.bubble_s)
+
+
+# --------------------------------------------------- exact-pipe == brute force
+def _all_simple_paths(net, src, dst):
+    out_edges = {}
+    for (u, v) in net.links:
+        out_edges.setdefault(u, []).append(v)
+    out, path = [], [src]
+
+    def rec(node):
+        if node == dst:
+            out.append(list(path))
+            return
+        for v in out_edges.get(node, ()):
+            if v not in path:
+                path.append(v)
+                rec(v)
+                path.pop()
+
+    rec(src)
+    return out
+
+
+def _brute_force_pipe(net, prof, req, K, cands):
+    """Exhaustive min over (segmentation, placement, subpath combinations) of
+    the pipelined evaluator; the tail is propagation-only and contributes no
+    pipeline stage, so its best (min-propagation) simple path is separable."""
+    from repro.core import Plan
+
+    ev = PlanEvaluator(net, prof, req)
+    L = prof.L
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, L), K - 1):
+        segs, lo = [], 1
+        for c in list(cuts) + [L]:
+            segs.append((lo, c))
+            lo = c + 1
+        for placement in itertools.product(*cands):
+            if not all(ev.segment_fits(n, lo, hi)
+                       for (lo, hi), n in zip(segs, placement)):
+                continue
+            path_sets = [_all_simple_paths(net, placement[k], placement[k + 1])
+                         for k in range(K - 1)]
+            if any(not ps for ps in path_sets):
+                continue
+            tails = _all_simple_paths(net, placement[-1], req.destination)
+            if not tails:
+                continue
+
+            def tail_prop(path):
+                # the evaluator charges the psi_K = 0 tail FW-only (Eq. 16)
+                return net.path_cost_breakdown(path, 0.0, None)[1]
+
+            tail = min(tails, key=tail_prop)
+            for combo in itertools.product(*path_sets):
+                plan = Plan(segments=list(segs), placement=list(placement),
+                            paths=[list(p) for p in combo],
+                            tail_path=tail if len(tail) > 1 else [])
+                best = min(best, ev.latency_s(plan))
+    return best
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_exact_pipe_equals_bruteforce(seed):
+    net, prof, req, K, cands = _random_instance(seed, n_nodes=5, L=5, K=3,
+                                                chord_p=0.3)
+    for M in (2, 4):
+        preq = _pipe(req, M)
+        res = exact_solve(net, prof, preq, K, cands)
+        bf = _brute_force_pipe(net, prof, preq, K, cands)
+        if bf == float("inf"):
+            assert not res.feasible
+        else:
+            assert res.feasible
+            assert res.latency_s == pytest.approx(bf, rel=1e-9)
+
+
+# ----------------------------------------------------------- BCD-pipe parity
+@pytest.mark.parametrize("seed", range(10))
+def test_bcd_pipe_vs_exact_pipe_parity(seed):
+    """exact-pipe is a true lower bound; BCD-pipe is seq-anchored (<= the
+    seq-optimal plan evaluated under pipe) and near-optimal in practice."""
+    net, prof, req, K, cands = _random_instance(seed, n_nodes=7, L=8, K=3)
+    seq_opt = exact_solve(net, prof, req, K, cands)
+    if not seq_opt.feasible:
+        return
+    for M in (4, 16):
+        preq = _pipe(req, M)
+        opt = exact_solve(net, prof, preq, K, cands)
+        heur = bcd_solve(net, prof, preq, K, cands)
+        assert opt.feasible and heur.feasible
+        ev = PlanEvaluator(net, prof, preq)
+        ev.check(heur.plan)
+        assert heur.latency_s >= opt.latency_s - 1e-12
+        assert heur.latency_s <= 2.0 * opt.latency_s  # BCD-pipe has more local
+        # optima than seq BCD (bottleneck couples placement+splitting); the
+        # anchored bound below is the hard guarantee
+        anchored = ev.latency_s(seq_opt.plan)
+        assert heur.latency_s <= anchored + 1e-12
+        assert opt.latency_s <= anchored + 1e-12
+        # monotone history (each half-step minimizes the pipe objective)
+        for a, b in zip(heur.history, heur.history[1:]):
+            assert b <= a + 1e-12
+
+
+def test_bcd_pipe_leq_bcd_seq_on_nsfnet():
+    """The suite invariant: same instance + solver, pipe latency <= seq."""
+    net = nsfnet(source="v4")
+    prof = resnet101_profile()
+    cands = [["v4"], ["v7", "v11"], ["v13"]]
+    for mode, b in [(IF, 32), (TR, 128)]:
+        req = ServiceChainRequest("resnet101", "v4", "v13", b, mode)
+        seq = bcd_solve(net, prof, req, 3, cands)
+        prev = seq.latency_s
+        for M in (2, 4, 8, 16, 32):
+            res = bcd_solve(net, prof, _pipe(req, M), 3, cands)
+            assert res.latency_s <= seq.latency_s * (1 + 1e-12)
+            assert res.latency_s <= prev * (1 + 1e-9)  # deeper pipeline helps
+            prev = res.latency_s
+
+
+def test_ilp_rejects_pipelined_requests():
+    net, prof, req, K, cands = _random_instance(0)
+    with pytest.raises(ValueError, match="seq"):
+        ilp_solve(net, prof, _pipe(req, 4), K, cands)
+
+
+def test_microbatch_clamp():
+    """M is clamped to the batch size: a 2-sample batch pipelines at most
+    2-deep, and M=clamped-to-1 is exactly sequential."""
+    req = ServiceChainRequest("m", "a", "b", 2, IF, schedule="pipe",
+                              n_microbatches=64)
+    assert req.microbatches() == 2
+    assert ServiceChainRequest("m", "a", "b", 1, IF, schedule="pipe",
+                               n_microbatches=64).microbatches() == 1
+    assert ServiceChainRequest("m", "a", "b", 128, IF).microbatches() == 1
+
+
+# ------------------------------------------------- serve: occupancy accounting
+def test_pipe_plan_demand_uses_steady_state_occupancy():
+    """A pipelined chain reserves min(rate, 1/tau): at a requested rate above
+    its streaming throughput it reserves strictly less than the seq chain."""
+    from repro.serve import effective_rate_rps, generate_fleet, plan_demand
+
+    net = nsfnet(source="v4")
+    prof = resnet101_profile()
+    fleet = generate_fleet(net, 1, "v4", "v13", 4, IF, 3, seed=0,
+                           model_id="resnet101", rate_rps=1.0)
+    r_seq = fleet[0]
+    res = bcd_solve(net, prof, r_seq.chain_request(), 3,
+                    r_seq.candidate_lists())
+    assert res.feasible
+    tau = PlanEvaluator(net, prof, _pipe(r_seq.chain_request(), 8)
+                        ).bottleneck_s(res.plan)
+    hot_rate = 2.0 / tau  # twice the pipeline's streaming throughput
+    r_seq = replace(r_seq, rate_rps=hot_rate)
+    r_pipe = replace(r_seq, schedule="pipe", n_microbatches=8)
+    assert effective_rate_rps(prof, r_pipe, res.plan, net) == pytest.approx(
+        1.0 / tau)
+    assert effective_rate_rps(prof, r_seq, res.plan, net) == hot_rate
+    d_seq = plan_demand(prof, r_seq, res.plan, net)
+    d_pipe = plan_demand(prof, r_pipe, res.plan, net)
+    for link, f in d_seq.link_fw_bps.items():
+        assert d_pipe.link_fw_bps[link] == pytest.approx(f / 2.0)
+    # node footprints are schedule-invariant (conservative full-batch peak)
+    assert d_pipe.node_mem_bytes == d_seq.node_mem_bytes
+    assert d_pipe.node_disk_bytes == d_seq.node_disk_bytes
+
+
+def test_pipe_fleet_admission_and_replay():
+    """Pipelined fleets admit at least as many chains as sequential ones at a
+    hot execution rate, and their admission records replay cleanly."""
+    from repro.serve import ServedRequest, ServePlanner, generate_fleet, replay_verify
+
+    net = nsfnet(source="v4")
+    prof = resnet101_profile()
+    kw = dict(seed=0, model_id="resnet101", rate_rps=8.0)
+    seq_fleet = generate_fleet(net, 8, "v4", "v13", 4, IF, 3, **kw)
+    pipe_fleet = generate_fleet(net, 8, "v4", "v13", 4, IF, 3,
+                                schedule="pipe", n_microbatches=8, **kw)
+    out_seq = ServePlanner(net, prof, solver="bcd").admit(seq_fleet)
+    out_pipe = ServePlanner(net, prof, solver="bcd").admit(pipe_fleet)
+    assert out_pipe.n_accepted >= out_seq.n_accepted
+    assert out_pipe.n_accepted >= 1
+    # round-trip the records and replay against a fresh residual state
+    records = [ServedRequest.from_dict(s.to_dict()) for s in out_pipe.served]
+    assert all(r.request.schedule == "pipe" for r in records)
+    assert replay_verify(net, prof, records)
+
+
+# ---------------------------------------------------- sweep: nsfnet_pipeline
+def test_nsfnet_pipeline_suite_speedups():
+    """Acceptance criterion: the nsfnet_pipeline report pairs every pipe
+    scenario with its seq counterpart, speedup >= 1 everywhere, and the M=1
+    rows are *exactly* 1.0 (bit-for-bit sequential)."""
+    from repro.sweep import SweepRunner, comparison_report, verify_result
+    from repro.sweep.suites import nsfnet_pipeline
+
+    specs = nsfnet_pipeline(quick=True)
+    results = SweepRunner(workers=0).run(specs)
+    assert all(r.feasible for r in results)
+    report = comparison_report(results)
+    sc = report["schedule_comparison"]
+    n_pipe = sum(r.spec.schedule == "pipe" for r in results)
+    assert sc is not None and sc["n_pairs"] == n_pipe > 0
+    for p in sc["pairs"].values():
+        assert p["speedup"] >= 1.0 - 1e-12
+        if p["n_microbatches"] == 1:
+            assert p["speedup"] == 1.0
+            assert p["bubble_s"] == 0.0
+        else:
+            assert p["bubble_s"] > 0.0
+    # artifact round-trip: every pipe result re-evaluates to its recorded latency
+    for r in results:
+        assert verify_result(r)
+
+
+def test_scenario_spec_schedule_roundtrip():
+    from repro.sweep import ScenarioSpec
+
+    spec = ScenarioSpec(batch_size=32, schedule="pipe", n_microbatches=8,
+                        solver="bcd")
+    again = ScenarioSpec.from_dict(spec.to_dict())
+    assert again.spec_hash() == spec.spec_hash()
+    assert "pipeM8" in spec.scenario_id()
+    seq = ScenarioSpec(batch_size=32, solver="bcd")
+    assert seq.schedule_key() == spec.schedule_key()
+    assert seq.group_key() != spec.group_key()
+    assert seq.spec_hash() != spec.spec_hash()
+    with pytest.raises(ValueError, match="ilp"):
+        ScenarioSpec(batch_size=32, schedule="pipe", n_microbatches=8,
+                     solver="ilp")
+    # an ilp spec whose M clamps to 1 is sequential and therefore fine
+    ScenarioSpec(batch_size=1, schedule="pipe", n_microbatches=8, solver="ilp")
+    with pytest.raises(ValueError, match="schedule"):
+        ScenarioSpec(schedule="interleaved")

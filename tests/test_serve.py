@@ -205,7 +205,8 @@ def test_eval_cache_keys_are_batch_and_mode_dependent():
     ev_a.segment_fits("v13", 1, 10)
     ev_b.segment_fits("v13", 1, 10)
     assert len(cache.fits) == 2
-    assert {k[3:] for k in cache.fits} == {(1, IF), (128, TR)}
+    # key suffix: (batch, mode, schedule, n_microbatches)
+    assert {k[3:] for k in cache.fits} == {(1, IF, "seq", 1), (128, TR, "seq", 1)}
 
 
 def test_eval_cache_fork_fits_shares_comp_only():
