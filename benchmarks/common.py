@@ -9,28 +9,21 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core import (
-    bcd_solve,
-    comm_ms_solve,
-    comp_ms_solve,
-    exact_solve,
-    ilp_solve,
+    ProblemInstance,
     nsfnet,
     resnet101_profile,
 )
+from repro.core import solve as engine_solve
+from repro.core import solver_names
 from repro.sweep.spec import candidate_sets as _candidate_sets
 from repro.sweep.suites import DEST, NSFNET_NODES, SOURCE
 
 # `exact` is the provably-ILP-equivalent joint DP (tests/test_core_solvers.py
 # proves equality with the HiGHS MILP); the latency grids use it so the full
 # paper sweep stays fast on this 1-core container.  `ilp` (HiGHS) is run in the
-# exec-time benchmarks, where its wall time is the measurement.
-SOLVERS = {
-    "ilp": ilp_solve,
-    "exact": exact_solve,
-    "bcd": bcd_solve,
-    "comp-ms": comp_ms_solve,
-    "comm-ms": comm_ms_solve,
-}
+# exec-time benchmarks, where its wall time is the measurement.  The scheme
+# names come from the engine registry (repro.core.solver_names).
+SOLVERS = tuple(solver_names())
 
 
 def candidate_sets(K: int, seed: int, nodes: list[str] | None = None,
@@ -58,7 +51,10 @@ def group_in_order(results, keyfn):
 
 
 def solve(scheme: str, net, profile, request, K, cands, **kw):
-    return SOLVERS[scheme](net, profile, request, K, cands, **kw)
+    """Solve one hand-built instance through the engine registry."""
+    problem = ProblemInstance(net, profile, request, K,
+                              tuple(tuple(c) for c in cands))
+    return engine_solve(problem, scheme, **kw)
 
 
 def paper_instance(source: str = SOURCE):

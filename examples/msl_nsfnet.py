@@ -1,7 +1,8 @@
 """The paper's own scenario end-to-end: ResNet101 over NSFNET.
 
 Solves model splitting + placement + chaining with all four schemes (exact
-ILP-equivalent DP, BCD, COMP-MS, COMM-MS) for MSI (K=3, b=2) and MSL (K=3,
+ILP-equivalent DP, BCD, COMP-MS, COMM-MS) plus the ``portfolio`` meta-solver
+(best-of-heuristics on one shared cache) for MSI (K=3, b=2) and MSL (K=3,
 b=128) and prints Fig. 6/7-style service paths.  Scenarios are declared as
 ``repro.sweep`` specs and executed through the engine — the same path the
 benchmark grids and the ``python -m repro.sweep`` CLI use.
@@ -11,7 +12,7 @@ benchmark grids and the ``python -m repro.sweep`` CLI use.
 from repro.core import IF, TR, PlanEvaluator
 from repro.sweep import ScenarioSpec, SweepRunner
 
-SCHEMES = ["exact", "bcd", "comp-ms", "comm-ms"]
+SCHEMES = ["exact", "bcd", "comp-ms", "comm-ms", "portfolio"]
 CANDIDATES = [["v4"], ["v7", "v11"], ["v13"]]
 
 
@@ -27,7 +28,9 @@ def show(result, ev) -> None:
         trans, prop = ev.cut_transfer_s(path, p.segments[k][1])
         print(f"   S{k+2}: {'->'.join(path)} (trans {trans*1e3:.1f} ms, "
               f"prop {prop*1e3:.1f} ms)")
-    print(f"   total {result.latency_s*1e3:.1f} ms  "
+    winner = (result.solver_stats or {}).get("winner")
+    print(f"   total {result.latency_s*1e3:.1f} ms [{result.status}]"
+          f"{f' (winner: {winner})' if winner else ''}  "
           f"(comp {result.computation_s*1e3:.1f} "
           f"/ trans {result.transmission_s*1e3:.1f} "
           f"/ prop {result.propagation_s*1e3:.1f})"

@@ -1,14 +1,33 @@
 """Core — the paper's contribution: joint optimization of model splitting,
 placement, and chaining for SFC-based multi-hop split learning/inference.
 
-Solvers:
-  * `ilp_solve`   — faithful MILP of Eqs. (1)-(15), HiGHS branch-and-bound (exact).
-  * `exact_solve` — provably equivalent joint DP (fast optimal oracle).
-  * `bcd_solve`   — the paper's BCD heuristic (Alg. 1: K-seq segmentation + DFTS).
-  * `comp_ms_solve` / `comm_ms_solve` — the paper's comparison schemes.
+The solving API is the engine triple (see docs/solvers.md):
+
+  * `ProblemInstance` — frozen, content-hashable problem description
+    (network + profile + request + K + candidate sets).
+  * `solve(problem, solver=...)` — capability-checked dispatch through the
+    solver registry; returns a `SolveOutcome` (plan, objective, status in
+    {optimal, feasible, infeasible}, wall time, solver stats).
+  * `@register_solver(name, schedules=..., optimal=...)` — one decorator adds
+    a solver (learned, randomized, external) to every layer: sweep grids,
+    the serving planner, benchmarks, and the CLIs.
+
+Registered solvers:
+  * `ilp`      — faithful MILP of Eqs. (1)-(15), HiGHS branch-and-bound (exact,
+                 sequential schedule only).
+  * `exact`    — provably equivalent joint DP (fast optimal oracle).
+  * `bcd`      — the paper's BCD heuristic (Alg. 1: K-seq segmentation + DFTS).
+  * `comp-ms` / `comm-ms` — the paper's comparison schemes.
+  * `portfolio` — meta-solver: best feasible outcome over a member set run on
+                 one shared EvalCache, with per-member stats.
+
+The flat `*_solve` functions are kept as deprecated shims (one
+DeprecationWarning per process; bit-for-bit identical plans).
 """
-from .baselines import comm_ms_solve, comp_ms_solve
-from .bcd import SolveResult, bcd_solve
+from . import baselines as _baselines  # registers comp-ms / comm-ms
+from . import bcd as _bcd  # registers bcd
+from . import exact as _exact  # registers exact
+from . import ilp as _ilp  # registers ilp
 from .costmodel import (
     BW,
     FW,
@@ -30,31 +49,55 @@ from .costmodel import (
     validate_segments,
 )
 from .dfts import dfts
-from .exact import exact_solve
-from .ilp import ilp_solve
+from .engine import (
+    PORTFOLIO_DEFAULT_MEMBERS,
+    SolverInfo,
+    deprecated_solver_alias,
+    ensure_solver_supported,
+    get_solver,
+    portfolio_solve,
+    register_solver,
+    solve,
+    solver_capabilities,
+    solver_names,
+    solver_supports,
+    unregister_solver,
+)
 from .network import LinkSpec, NodeSpec, PhysicalNetwork, transmission_time_s
 from .plan import (EvalCache, LatencyBreakdown, Plan, PlanEvaluator,
                    ServiceChainRequest)
+from .problem import (FEASIBLE, INFEASIBLE, OPTIMAL, STATUSES, ProblemInstance,
+                      SolveOutcome, SolveResult)
 from .resnet101_profile import resnet101_profile
 from .segmentation import k_sequence_segmentation
 from .topology import candidate_sets, nsfnet, random_network, tpu_pod_topology
 
-# The one solver registry: name -> solve function with the uniform signature
-# (net, profile, request, K, candidates, cache=..., **kwargs).  The sweep and
-# serve layers both resolve solver names here.
-SOLVERS = {
-    "ilp": ilp_solve,
-    "exact": exact_solve,
-    "bcd": bcd_solve,
-    "comp-ms": comp_ms_solve,
-    "comm-ms": comm_ms_solve,
-}
+# Legacy flat entry points: thin deprecated shims over the registry.  They
+# keep the historical `(net, profile, request, K, candidates, **kwargs)`
+# signature and return bit-for-bit the same plans as `solve(...)`; importing
+# the solver *modules* (repro.core.bcd, ...) keeps the undeprecated
+# implementations for code that needs them.
+bcd_solve = deprecated_solver_alias("bcd", "bcd_solve")
+exact_solve = deprecated_solver_alias("exact", "exact_solve")
+ilp_solve = deprecated_solver_alias("ilp", "ilp_solve")
+comp_ms_solve = deprecated_solver_alias("comp-ms", "comp_ms_solve")
+comm_ms_solve = deprecated_solver_alias("comm-ms", "comm_ms_solve")
+
+# Legacy registry view: name -> registered solve function.  Derived from the
+# engine registry in this one place; new code should use `solve(...)` /
+# `get_solver(...)`, which also see solvers registered after import.
+SOLVERS = {name: get_solver(name).fn for name in solver_names()}
 
 __all__ = [
     "BW", "FW", "IF", "TR", "SEQ", "PIPE", "SCHEDULES", "effective_microbatches",
     "CPU_XEON_6226R", "GPU_RTX_A6000", "ComputeModel",
     "EvalCache", "LayerProfile", "ModelProfile", "LatencyBreakdown",
-    "Plan", "PlanEvaluator", "ServiceChainRequest", "SolveResult",
+    "Plan", "PlanEvaluator", "ServiceChainRequest",
+    "OPTIMAL", "FEASIBLE", "INFEASIBLE", "STATUSES",
+    "ProblemInstance", "SolveOutcome", "SolveResult", "SolverInfo",
+    "register_solver", "unregister_solver", "solve", "solver_names",
+    "solver_supports", "ensure_solver_supported", "get_solver",
+    "solver_capabilities", "portfolio_solve", "PORTFOLIO_DEFAULT_MEMBERS",
     "LinkSpec", "NodeSpec", "PhysicalNetwork", "SOLVERS",
     "bcd_solve", "exact_solve", "ilp_solve", "comp_ms_solve", "comm_ms_solve",
     "dfts", "k_sequence_segmentation",

@@ -10,11 +10,12 @@ from __future__ import annotations
 
 import time
 
-from .bcd import SolveResult
-from .costmodel import BW, FW, TR, ModelProfile, dirs_for_mode
+from .costmodel import BW, FW, PIPE, SEQ, TR, ModelProfile, dirs_for_mode
 from .dfts import dfts
+from .engine import register_solver
 from .network import PhysicalNetwork
 from .plan import EvalCache, PlanEvaluator, ServiceChainRequest
+from .problem import SolveResult
 
 INF = float("inf")
 
@@ -178,12 +179,18 @@ def _two_step(
                        solver=name)
 
 
+@register_solver("comp-ms", schedules=(SEQ, PIPE),
+                 description="paper comparison scheme: computation-oriented "
+                             "split, then schedule-aware DFTS")
 def comp_ms_solve(net, profile, request, K, candidates,
                   cache: EvalCache | None = None) -> SolveResult:
     segs = comp_ms_split(net, profile, request, K, candidates)
     return _two_step(net, profile, request, K, candidates, segs, "comp-ms", cache)
 
 
+@register_solver("comm-ms", schedules=(SEQ, PIPE),
+                 description="paper comparison scheme: communication-oriented "
+                             "split, then schedule-aware DFTS")
 def comm_ms_solve(net, profile, request, K, candidates,
                   cache: EvalCache | None = None) -> SolveResult:
     segs = comm_ms_split(profile, request, K, net, candidates)

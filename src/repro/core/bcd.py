@@ -17,32 +17,15 @@ trajectories reach different coordinate-wise optima.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field, replace
+from dataclasses import replace
 
 from .costmodel import PIPE, SEQ, ModelProfile, even_split
 from .dfts import dfts
+from .engine import register_solver
 from .network import PhysicalNetwork
-from .plan import (EvalCache, LatencyBreakdown, Plan, PlanEvaluator,
-                   ServiceChainRequest)
+from .plan import (EvalCache, Plan, PlanEvaluator, ServiceChainRequest)
+from .problem import SolveResult  # re-exported: legacy import site
 from .segmentation import k_sequence_segmentation
-
-
-@dataclass
-class SolveResult:
-    plan: Plan | None
-    latency: LatencyBreakdown | None
-    wall_time_s: float
-    iterations: int = 0
-    history: list[float] = field(default_factory=list)
-    solver: str = "bcd"
-
-    @property
-    def feasible(self) -> bool:
-        return self.plan is not None
-
-    @property
-    def latency_s(self) -> float:
-        return self.latency.total_s if self.latency else float("inf")
 
 
 def _alternate(
@@ -84,6 +67,10 @@ def _alternate(
     return plan, prev, history, iters
 
 
+@register_solver("bcd", schedules=(SEQ, PIPE),
+                 description="paper Alg. 1 heuristic: alternate K-seq "
+                             "segmentation and DFTS; monotone, seq-anchored "
+                             "under pipe")
 def bcd_solve(
     net: PhysicalNetwork,
     profile: ModelProfile,

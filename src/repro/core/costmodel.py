@@ -15,6 +15,7 @@ examples (Fig. 6a: kappa_CPU(2, 105.3e9) = 25.8 -> printed 25.7 ms; kappa_GPU(2,
 """
 from __future__ import annotations
 
+import json
 import math
 from dataclasses import dataclass, field
 from typing import Sequence
@@ -153,6 +154,8 @@ class ModelProfile:
     _cum: dict | None = field(default=None, init=False, repr=False, compare=False)
     _peak_memo: dict = field(default_factory=dict, init=False, repr=False,
                              compare=False)
+    _content_key: str | None = field(default=None, init=False, repr=False,
+                                     compare=False)
 
     def __post_init__(self) -> None:
         if len(self.layers) < 2:
@@ -166,6 +169,19 @@ class ModelProfile:
         """Drop the prefix-sum tables after mutating ``layers`` in place."""
         self._cum = None
         self._peak_memo.clear()
+        self._content_key = None
+
+    def content_key(self) -> str:
+        """Canonical serialization of the profile's content (model_id + the
+        full layer cost table) — the profile half of ProblemInstance identity.
+        Cached; dropped by :meth:`invalidate_cache`."""
+        if self._content_key is None:
+            self._content_key = json.dumps(
+                [self.model_id,
+                 [[l.name, l.flops_fw, l.flops_bw, l.act_bytes, l.grad_bytes,
+                   l.mem_bytes, l.disk_bytes] for l in self.layers]],
+                separators=(",", ":"))
+        return self._content_key
 
     def _cumsums(self) -> dict:
         if self._cum is None:

@@ -18,15 +18,19 @@ from __future__ import annotations
 
 import time
 
-from .bcd import SolveResult
-from .costmodel import BW, FW, PIPE, TR, ModelProfile
+from .costmodel import BW, FW, PIPE, SEQ, TR, ModelProfile
 from .dfts import _backtrack
+from .engine import register_solver
 from .network import PhysicalNetwork
 from .plan import EvalCache, Plan, PlanEvaluator, ServiceChainRequest
+from .problem import SolveResult
 
 INF = float("inf")
 
 
+@register_solver("exact", schedules=(SEQ, PIPE), optimal=True,
+                 description="ILP-equivalent joint DP (fast optimal oracle); "
+                             "pipelined variant exact via bottleneck-cap scan")
 def exact_solve(
     net: PhysicalNetwork,
     profile: ModelProfile,

@@ -25,10 +25,11 @@ import numpy as np
 from scipy import sparse
 from scipy.optimize import Bounds, LinearConstraint, milp
 
-from .bcd import SolveResult
-from .costmodel import BW, FW, TR, ModelProfile, dirs_for_mode
+from .costmodel import BW, FW, SEQ, TR, ModelProfile, dirs_for_mode
+from .engine import register_solver
 from .network import PhysicalNetwork, transmission_time_s
 from .plan import Plan, PlanEvaluator, ServiceChainRequest
+from .problem import SolveResult
 
 EPS_SUBPATH1 = 1e-9  # tiny cost on S_1 physical edges to keep solutions loop-free
 
@@ -76,6 +77,9 @@ class _Builder:
                     options=options)
 
 
+@register_solver("ilp", schedules=(SEQ,), optimal=True,
+                 description="faithful HiGHS MILP of Eqs. (1)-(15); "
+                             "sequential schedule only")
 def ilp_solve(
     net: PhysicalNetwork,
     profile: ModelProfile,
@@ -86,12 +90,14 @@ def ilp_solve(
     cache: object | None = None,  # accepted for solver-API uniformity; the MILP
     # builds its own coefficient tables and has nothing to memoize across calls.
 ) -> SolveResult:
-    if request.microbatches() > 1:
-        # The MILP linearizes the *sequential* Eq. (16) objective; the
-        # pipelined bottleneck max has no formulation here.  The exact DP
-        # (`exact_solve`) is the pipelined optimality oracle instead.
-        raise ValueError("ilp_solve models schedule='seq' only; "
-                         "use exact_solve/bcd_solve for pipelined requests")
+    # The MILP linearizes the *sequential* Eq. (16) objective; the pipelined
+    # bottleneck max has no formulation here.  The capability check yields the
+    # same uniform error as the engine path for direct/legacy callers.
+    from .engine import ensure_solver_supported
+
+    ensure_solver_supported("ilp", schedule=request.schedule,
+                            batch_size=request.batch_size,
+                            n_microbatches=request.n_microbatches)
     t0 = time.perf_counter()
     L = profile.L
     b = request.batch_size

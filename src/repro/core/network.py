@@ -8,6 +8,7 @@ gradients flowing back along the same subpath, i.e. j->i traffic charged on link
 from __future__ import annotations
 
 import heapq
+import json
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -60,11 +61,16 @@ class PhysicalNetwork:
                                  compare=False)
     _node_idx: dict | None = field(default=None, init=False, repr=False,
                                    compare=False)
+    # Canonical content serialization (ProblemInstance identity); computed
+    # lazily, invalidated together with the routing caches on mutation.
+    _content_key: str | None = field(default=None, init=False, repr=False,
+                                     compare=False)
 
     def _invalidate(self) -> None:
         self._sssp_cache.clear()
         self._frontier_mats.clear()
         self._node_idx = None
+        self._content_key = None
 
     def add_node(self, spec: NodeSpec) -> None:
         self.nodes[spec.name] = spec
@@ -187,6 +193,26 @@ class PhysicalNetwork:
     def clear_routing_cache(self) -> None:
         """Drop cached frontiers (needed only after mutating a LinkSpec in place)."""
         self._invalidate()
+
+    def content_key(self) -> str:
+        """Canonical serialization of the topology's *content* — every node
+        spec (incl. its compute model constants) and every directed link.
+        Two networks built independently from equal data produce equal keys;
+        cached and invalidated with the routing caches on mutation."""
+        if self._content_key is None:
+            self._content_key = json.dumps({
+                "nodes": {
+                    n: [s.compute.name, [list(p) for p in s.compute.pieces],
+                        s.compute.alpha_tau, s.compute.beta_tau,
+                        s.mem_capacity, s.disk_capacity]
+                    for n, s in sorted(self.nodes.items())
+                },
+                "links": [
+                    [u, v, s.bw_fw, s.bw_bw, s.delay_fw, s.delay_bw]
+                    for (u, v), s in sorted(self.links.items())
+                ],
+            }, sort_keys=True, separators=(",", ":"))
+        return self._content_key
 
     def node_index(self) -> dict[str, int]:
         """Stable node -> dense-column index (sorted names; cached)."""

@@ -20,7 +20,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..core import ComputeModel, PhysicalNetwork, bcd_solve
+from ..core import ComputeModel, PhysicalNetwork, ProblemInstance, solve
 from ..core.costmodel import ModelProfile
 from ..core.plan import ServiceChainRequest
 
@@ -68,9 +68,15 @@ class ElasticPlanController:
         self.candidates = [list(c) for c in candidates]
         self.calibrator = StepTimeCalibrator()
         self.events: list[FTEvent] = []
-        self.result = bcd_solve(net, profile, request, K, self.candidates)
+        self.result = self._solve()
         if not self.result.feasible:
             raise ValueError("initial plan infeasible")
+
+    def _solve(self):
+        return solve(ProblemInstance(self.net, self.profile, self.request,
+                                     self.K, tuple(tuple(c) for c in
+                                                   self.candidates)),
+                     solver="bcd")
 
     @property
     def plan(self):
@@ -98,6 +104,10 @@ class ElasticPlanController:
                 spec = self.net.nodes[node]
                 self.net.nodes[node] = type(spec)(
                     spec.name, fitted, spec.mem_capacity, spec.disk_capacity)
+                # in-place node swap bypasses add_node: drop derived caches
+                # (routing frontiers are compute-independent, but the content
+                # key — the planner's instance identity — is not)
+                self.net.clear_routing_cache()
                 self.events.append(FTEvent(step, "straggler",
                                            f"{node} {seconds/predicted:.1f}x"))
                 return self._replan(step, f"straggler {node}")
@@ -105,8 +115,7 @@ class ElasticPlanController:
 
     def _replan(self, step: int, why: str):
         t0 = time.perf_counter()
-        res = bcd_solve(self.net, self.profile, self.request, self.K,
-                        self.candidates)
+        res = self._solve()
         if not res.feasible:
             raise ValueError(f"re-plan infeasible ({why})")
         changed = res.plan.placement != self.result.plan.placement or \

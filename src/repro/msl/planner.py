@@ -18,9 +18,9 @@ from ..core import (
     LayerProfile,
     ModelProfile,
     PlanEvaluator,
+    ProblemInstance,
     ServiceChainRequest,
-    bcd_solve,
-    exact_solve,
+    solve,
     tpu_pod_topology,
 )
 from ..models.profiles import model_profile, state_multiplier
@@ -74,7 +74,6 @@ def plan_pipeline(cfg: ModelConfig, *, seq_len: int, microbatch: int,
                            chips_per_group=chips_per_group)
     nodes = sorted(net.nodes)
     best: PipelinePlan | None = None
-    solve = bcd_solve if solver == "bcd" else exact_solve
     for K in candidate_K:
         if K > prof.L or K > len(nodes):
             continue
@@ -84,7 +83,9 @@ def plan_pipeline(cfg: ModelConfig, *, seq_len: int, microbatch: int,
             continue
         req = ServiceChainRequest(cfg.name, nodes[0], nodes[-1], microbatch,
                                   mode)
-        res = solve(net, prof, req, K, cands)
+        res = solve(ProblemInstance(net, prof, req, K,
+                                    tuple(tuple(c) for c in cands)),
+                    solver=solver)
         if not res.feasible:
             continue
         plan = PipelinePlan(

@@ -9,8 +9,9 @@ declared blocked.  See docs/serve.md.
 
 CLI:  ``PYTHONPATH=src python -m repro.serve --n-requests 16 --policy fcfs``
 """
-from .planner import (SOLVERS, ServedRequest, ServeOutcome, ServePlanner,
-                      replay_verify)
+from repro.core import SOLVERS  # legacy re-export; use repro.core.solve(...)
+
+from .planner import ServedRequest, ServeOutcome, ServePlanner, replay_verify
 from .policies import POLICIES, POLICY_NAMES
 from .requests import ARRIVALS, BATCH_SPREAD, ServeRequest, generate_fleet
 from .residual import PlanDemand, ResidualState, effective_rate_rps, plan_demand

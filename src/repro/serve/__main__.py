@@ -15,7 +15,9 @@ import argparse
 import json
 import sys
 
-from .planner import SOLVERS, ServePlanner
+from repro.core import solver_names, solver_supports
+
+from .planner import ServePlanner
 from .policies import POLICY_NAMES
 from .requests import ARRIVALS, generate_fleet
 
@@ -45,15 +47,17 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--n-microbatches", type=int, default=1,
                     help="pipeline depth M for --schedule pipe")
     ap.add_argument("--policy", default="fcfs", choices=POLICY_NAMES)
-    ap.add_argument("--solver", default="bcd", choices=sorted(SOLVERS))
+    ap.add_argument("--solver", default="bcd", choices=sorted(solver_names()))
     ap.add_argument("--no-replan", action="store_true",
                     help="disable capacity-aware replanning on rejection")
     ap.add_argument("--json", default=None, help="write summary + records here")
     args = ap.parse_args(argv)
-    if (args.solver == "ilp" and args.schedule == "pipe"
-            and args.n_microbatches > 1):
-        ap.error("--solver ilp models --schedule seq only; "
-                 "use exact or bcd for pipelined fleets")
+    # No batch_size: the fleet's batch spread means some requests may pipeline
+    # deeper than the base batch clamps, so check the unclamped depth.
+    ok, reason = solver_supports(args.solver, schedule=args.schedule,
+                                 n_microbatches=args.n_microbatches)
+    if not ok:
+        ap.error(reason)
 
     from repro.sweep.spec import build_profile, build_topology
 

@@ -27,8 +27,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import (SOLVERS, EvalCache, ModelProfile, PhysicalNetwork,
-                        Plan, PlanEvaluator, SolveResult)
+from repro.core import (EvalCache, ModelProfile, PhysicalNetwork, Plan,
+                        PlanEvaluator, SolveOutcome, get_solver, solve)
 
 from .policies import POLICIES
 from .requests import ServeRequest
@@ -158,12 +158,10 @@ class ServePlanner:
                  solver: str = "bcd", replan: bool = True,
                  cache: EvalCache | None = None,
                  solver_kwargs: dict | None = None):
-        if solver not in SOLVERS:
-            raise ValueError(f"solver must be one of {sorted(SOLVERS)}")
+        get_solver(solver)  # uniform unknown-solver error from the registry
         self.net = net
         self.profile = profile
         self.solver_name = solver
-        self.solver = SOLVERS[solver]
         self.solver_kwargs = dict(solver_kwargs or {})
         self.replan = replan
         # snapshot cache: batch/mode are part of EvalCache keys, so one cache
@@ -171,10 +169,9 @@ class ServePlanner:
         self.cache = cache if cache is not None else EvalCache()
 
     def _solve(self, net: PhysicalNetwork, request: ServeRequest,
-               cache: EvalCache | None) -> SolveResult:
-        return self.solver(net, self.profile, request.chain_request(),
-                           request.K, request.candidate_lists(), cache=cache,
-                           **self.solver_kwargs)
+               cache: EvalCache | None) -> SolveOutcome:
+        return solve(request.problem(net, self.profile), self.solver_name,
+                     cache=cache, **self.solver_kwargs)
 
     def admit(self, requests: list[ServeRequest],
               policy: str = "fcfs") -> ServeOutcome:
@@ -182,11 +179,13 @@ class ServePlanner:
             raise ValueError(f"policy must be one of {sorted(POLICIES)}")
         t0 = time.perf_counter()
 
-        # 1. pre-solve each distinct request shape on the snapshot
-        presolved: dict[tuple, SolveResult] = {}
+        # 1. pre-solve each distinct request shape on the snapshot, deduped by
+        # ProblemInstance content hash (the engine-wide instance identity)
+        presolved: dict[str, SolveOutcome] = {}
+        keys: dict[int, str] = {}
         estimates: dict[int, float] = {}
         for r in requests:
-            key = r.solve_key()
+            key = keys[r.request_id] = r.solve_key(self.net, self.profile)
             if key not in presolved:
                 presolved[key] = self._solve(self.net, r, self.cache)
             estimates[r.request_id] = presolved[key].latency_s
@@ -198,7 +197,7 @@ class ServePlanner:
         state = ResidualState(self.net)
         served: list[ServedRequest] = []
         for r in order:
-            plan = presolved[r.solve_key()].plan
+            plan = presolved[keys[r.request_id]].plan
             chosen, replanned = None, False
             if plan is not None and state.fits(self.profile, r, plan):
                 chosen = plan

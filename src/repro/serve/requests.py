@@ -11,8 +11,8 @@ from __future__ import annotations
 import random
 from dataclasses import dataclass, field
 
-from repro.core import (IF, SCHEDULES, SEQ, TR, PhysicalNetwork,
-                        ServiceChainRequest, candidate_sets)
+from repro.core import (IF, SCHEDULES, SEQ, TR, ModelProfile, PhysicalNetwork,
+                        ProblemInstance, ServiceChainRequest, candidate_sets)
 
 
 @dataclass(frozen=True)
@@ -48,11 +48,19 @@ class ServeRequest:
     def candidate_lists(self) -> list[list[str]]:
         return [list(c) for c in self.candidates]
 
-    def solve_key(self) -> tuple:
+    def problem(self, net: PhysicalNetwork,
+                profile: ModelProfile) -> ProblemInstance:
+        """The request's :class:`ProblemInstance` on a concrete fabric."""
+        return ProblemInstance(net, profile, self.chain_request(), self.K,
+                               self.candidates)
+
+    def solve_key(self, net: PhysicalNetwork, profile: ModelProfile) -> str:
         """Requests sharing this key are the same planning problem — the
-        planner pre-solves each distinct key once per admission round."""
-        return (self.source, self.destination, self.batch_size, self.mode,
-                self.K, self.candidates, self.schedule, self.n_microbatches)
+        planner pre-solves each distinct key once per admission round.
+        Delegates to :meth:`ProblemInstance.content_hash`, the same identity
+        ``ScenarioSpec.instance_key`` uses, so serve presolve dedup and sweep
+        instance grouping can never disagree."""
+        return self.problem(net, profile).content_hash()
 
 
 # The deterministic batch-size spread applied across a generated fleet (cycled

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m repro.sweep --suite nsfnet_paper --quick
     PYTHONPATH=src python -m repro.sweep --list
+    PYTHONPATH=src python -m repro.sweep --list-solvers
     PYTHONPATH=src python -m repro.sweep --suite nsfnet_faults --workers 2 \
         --out sweep_out --cache-dir sweep_out/.cache
 
@@ -49,7 +50,21 @@ def main(argv: list[str] | None = None) -> int:
                          "(default), N >= 2 = N processes, 'auto' or a "
                          "negative value = all cores (os.cpu_count())")
     ap.add_argument("--list", action="store_true", help="list suites and exit")
+    ap.add_argument("--list-solvers", action="store_true",
+                    help="list registered solvers + declared capabilities "
+                         "and exit")
     args = ap.parse_args(argv)
+
+    if args.list_solvers:
+        from repro.core import solver_capabilities
+
+        print(f"{'solver':<12} {'schedules':<10} {'optimal':>7} {'meta':>5}  "
+              f"description")
+        for cap in solver_capabilities():
+            print(f"{cap['name']:<12} {'+'.join(cap['schedules']):<10} "
+                  f"{str(cap['optimal']):>7} {str(cap['meta']):>5}  "
+                  f"{cap['description']}")
+        return 0
 
     if args.list:
         for name, fn in SUITES.items():

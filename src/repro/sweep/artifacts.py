@@ -18,7 +18,7 @@ from .spec import SUITE_SCHEMA_VERSION
 CSV_FIELDS = [
     "scenario_id", "suite", "figure", "cell", "topology", "profile", "mode",
     "K", "batch_size", "schedule", "n_microbatches", "solver",
-    "candidate_seed", "feasible", "latency_s",
+    "candidate_seed", "feasible", "status", "latency_s",
     "computation_s", "transmission_s", "propagation_s", "bubble_s",
     # seq-vs-pipe pairing (pipe rows with a feasible seq counterpart only)
     "seq_latency_s", "pipe_speedup",
@@ -73,6 +73,7 @@ def write_artifacts(out_dir: str | Path, suite_name: str,
                 "solver": s.solver,
                 "candidate_seed": s.candidate_seed,
                 "feasible": r.feasible,
+                "status": _opt(r.status),
                 "latency_s": r.latency_s,
                 "computation_s": r.computation_s,
                 "transmission_s": r.transmission_s,

@@ -20,7 +20,18 @@ from collections import defaultdict
 
 from .runner import ScenarioResult
 
+# Name-based fallback for results recorded before the engine stamped a solve
+# status (schema < 4); current results carry SolveOutcome.status directly.
 OPTIMAL_SOLVERS = ("exact", "ilp")
+
+
+def _is_optimal(r: ScenarioResult) -> bool:
+    """Optimal-class reference test: the engine-stamped status when present
+    (covers e.g. a portfolio whose winning member is optimal), else the
+    legacy solver-name convention."""
+    if r.status is not None:
+        return r.status == "optimal"
+    return r.spec.solver in OPTIMAL_SOLVERS
 
 
 def schedule_pairs(results: list[ScenarioResult]) -> dict[str, dict]:
@@ -80,7 +91,7 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
         feas = [r for r in rs if r.feasible]
         ref = None
         for r in feas:
-            if r.spec.solver in OPTIMAL_SOLVERS:
+            if _is_optimal(r):
                 if ref is None or r.latency_s < ref.latency_s:
                     ref = r
         if ref is None and feas:
@@ -95,6 +106,7 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
             a = agg[r.spec.solver]
             a["n"] += 1
             row: dict = {"feasible": r.feasible,
+                         "status": r.status,
                          "wall_time_s": r.wall_time_s,
                          "iterations": r.iterations}
             if r.acceptance_ratio is not None:  # serve (fleet) scenario

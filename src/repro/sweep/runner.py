@@ -24,8 +24,8 @@ from concurrent.futures import ProcessPoolExecutor
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
 
-from repro.core import (SOLVERS, EvalCache, LatencyBreakdown, Plan,
-                        PlanEvaluator, SolveResult)
+from repro.core import (EvalCache, LatencyBreakdown, Plan, PlanEvaluator,
+                        SolveOutcome, solve)
 
 from .spec import ScenarioSpec
 
@@ -43,6 +43,8 @@ class ScenarioResult:
 
     spec: ScenarioSpec
     feasible: bool
+    status: str | None = None  # SolveOutcome status (optimal|feasible|infeasible)
+    solver_stats: dict | None = None  # SolveOutcome.stats (portfolio members, ...)
     latency_s: float | None = None
     computation_s: float | None = None
     transmission_s: float | None = None
@@ -146,18 +148,19 @@ def run_scenario(spec: ScenarioSpec, use_context_cache: bool = True) -> Scenario
         net, profile, cache = spec.build_network(), spec.build_profile(), None
     if spec.n_requests > 1:
         return _run_serve_scenario(spec, net, profile, cache)
-    request = spec.request()
-    candidates = spec.build_candidates(net)
-    solver = SOLVERS[spec.solver]
-    res: SolveResult = solver(net, profile, request, spec.K, candidates,
+    res: SolveOutcome = solve(spec.problem(net, profile), spec.solver,
                               cache=cache, **spec.solver_kwargs)
     if not res.feasible:
-        return ScenarioResult(spec, False, wall_time_s=res.wall_time_s,
+        return ScenarioResult(spec, False, status=res.status,
+                              solver_stats=res.stats or None,
+                              wall_time_s=res.wall_time_s,
                               iterations=res.iterations)
     lb: LatencyBreakdown = res.latency
     p = res.plan
     return ScenarioResult(
         spec, True,
+        status=res.status,
+        solver_stats=res.stats or None,
         latency_s=lb.total_s,
         computation_s=lb.computation_s,
         transmission_s=lb.transmission_s,

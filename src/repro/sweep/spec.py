@@ -17,14 +17,14 @@ from repro.core import (
     PIPE,
     SCHEDULES,
     SEQ,
-    SOLVERS,
     TR,
     LinkSpec,
     ModelProfile,
     PhysicalNetwork,
+    ProblemInstance,
     ServiceChainRequest,
     candidate_sets,
-    effective_microbatches,
+    ensure_solver_supported,
     nsfnet,
     random_network,
     resnet101_profile,
@@ -33,9 +33,7 @@ from repro.core import (
 from repro.serve.policies import POLICY_NAMES
 from repro.serve.requests import ARRIVALS
 
-SUITE_SCHEMA_VERSION = 3  # v3: schedule/n_microbatches spec fields + seq-vs-pipe report
-
-SOLVER_NAMES = tuple(SOLVERS)  # the single registry lives in repro.core
+SUITE_SCHEMA_VERSION = 4  # v4: engine dispatch — solve status + solver stats
 
 # ------------------------------------------------------------------ topologies
 TOPOLOGIES = {
@@ -141,16 +139,15 @@ class ScenarioSpec:
     def __post_init__(self) -> None:
         if self.mode not in (IF, TR):
             raise ValueError(f"mode must be IF|TR, got {self.mode!r}")
-        if self.solver not in SOLVER_NAMES:
-            raise ValueError(f"solver must be one of {SOLVER_NAMES}")
         if self.schedule not in SCHEDULES:
             raise ValueError(f"schedule must be one of {SCHEDULES}")
         if self.n_microbatches < 1:
             raise ValueError("n_microbatches must be >= 1")
-        if (self.solver == "ilp" and self.schedule == PIPE
-                and effective_microbatches(self.batch_size,
-                                           self.n_microbatches) > 1):
-            raise ValueError("the ilp solver models schedule='seq' only")
+        # The one capability check: unknown solver names and solver/schedule
+        # mismatches (e.g. ilp models seq only) both come from the registry.
+        ensure_solver_supported(self.solver, schedule=self.schedule,
+                                batch_size=self.batch_size,
+                                n_microbatches=self.n_microbatches)
         if self.n_requests < 1:
             raise ValueError("n_requests must be >= 1")
         if self.arrival not in ARRIVALS:
@@ -225,6 +222,26 @@ class ScenarioSpec:
                                    self.batch_size, self.mode,
                                    schedule=self.schedule,
                                    n_microbatches=self.n_microbatches)
+
+    def problem(self, net: PhysicalNetwork | None = None,
+                profile: ModelProfile | None = None) -> ProblemInstance:
+        """The spec's single-chain :class:`ProblemInstance` (built objects can
+        be passed in to reuse the runner's per-process context caches).  Fleet
+        specs (``n_requests > 1``) describe an admission round, not one solve."""
+        if self.n_requests > 1:
+            raise ValueError("a fleet spec (n_requests > 1) is an admission "
+                             "round, not a single ProblemInstance")
+        net = net if net is not None else self.build_network()
+        profile = profile if profile is not None else self.build_profile()
+        return ProblemInstance(net, profile, self.request(), self.K,
+                               tuple(tuple(c) for c in
+                                     self.build_candidates(net)))
+
+    def instance_key(self) -> str:
+        """Content hash of the spec's problem — the same identity the serve
+        layer's presolve dedup uses (``ServeRequest.solve_key``), so sweep
+        instance grouping and serve dedup can never disagree."""
+        return self.problem().content_hash()
 
     def build_fleet(self, net: PhysicalNetwork):
         """The seeded request fleet of a serve scenario (n_requests > 1)."""

@@ -18,7 +18,9 @@ SOURCE, DEST = "v4", "v13"
 # `exact` is the ILP-equivalent joint DP (tests prove equality with the HiGHS
 # MILP); the latency grids use it so the full paper sweep stays fast.  `ilp`
 # is reserved for the exec-time suites, where its wall time is the measurement.
-LATENCY_SCHEMES = ("exact", "bcd", "comp-ms", "comm-ms")
+# `portfolio` is the engine's best-of-heuristics meta-solver (docs/solvers.md);
+# sweeping it alongside its members shows the best-of gap vs the optimum.
+LATENCY_SCHEMES = ("exact", "bcd", "comp-ms", "comm-ms", "portfolio")
 EXEC_SCHEMES = ("ilp", "bcd", "comp-ms", "comm-ms")
 
 

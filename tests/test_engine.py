@@ -1,0 +1,349 @@
+"""SolverEngine: ProblemInstance identity, registry capabilities, deprecation
+shims, the portfolio meta-solver, engine/legacy parity on the paper suites,
+and third-party solver registration end-to-end through repro.sweep."""
+import warnings
+
+import pytest
+
+from repro.core import (
+    IF,
+    PIPE,
+    SEQ,
+    TR,
+    EvalCache,
+    ModelProfile,
+    ProblemInstance,
+    ServiceChainRequest,
+    SolveOutcome,
+    SolveResult,
+    candidate_sets,
+    ensure_solver_supported,
+    get_solver,
+    nsfnet,
+    register_solver,
+    resnet101_profile,
+    solve,
+    solver_names,
+    solver_supports,
+    unregister_solver,
+)
+from repro.core.engine import _WARNED_ALIASES, deprecated_solver_alias
+from repro.serve.requests import generate_fleet
+from repro.sweep import ScenarioSpec, run_scenario
+from repro.sweep.runner import clear_context
+from repro.sweep.suites import nsfnet_paper, nsfnet_pipeline
+
+NET = nsfnet(source="v4")
+PROF = resnet101_profile()
+# a 6-layer slice of Table I: keeps the MILP solves in this file fast
+SMALL_PROF = ModelProfile("resnet6", resnet101_profile().layers[:6])
+CANDS = (("v4",), ("v7", "v11"), ("v13",))
+
+
+def _problem(b=2, mode=IF, schedule=SEQ, M=1, K=3, cands=CANDS,
+             profile=PROF):
+    req = ServiceChainRequest(profile.model_id, "v4", "v13", b, mode,
+                              schedule=schedule, n_microbatches=M)
+    return ProblemInstance(NET, profile, req, K, cands)
+
+
+# ------------------------------------------------------- ProblemInstance
+def test_problem_instance_content_hash_is_structural():
+    a = _problem()
+    b = ProblemInstance(nsfnet(source="v4"), resnet101_profile(),
+                        a.request, 3, [["v4"], ["v7", "v11"], ["v13"]])
+    assert a == b and hash(a) == hash(b)
+    assert a.content_hash() == b.content_hash()
+    assert a.content_hash() != _problem(b=4).content_hash()
+    assert a.content_hash() != _problem(cands=(("v4",), ("v7",), ("v13",))
+                                        ).content_hash()
+
+
+def test_problem_instance_hash_sees_network_and_profile_content():
+    net2 = nsfnet(source="v4")
+    spec = net2.links[("v4", "v5")]
+    net2.add_link("v4", "v5", type(spec)(spec.bw_fw * 2, spec.bw_bw,
+                                         spec.delay_fw, spec.delay_bw))
+    p2 = ProblemInstance(net2, PROF, _problem().request, 3, CANDS)
+    assert p2.content_hash() != _problem().content_hash()
+
+
+def test_pipe_with_depth_one_normalizes_to_seq_identity():
+    # pipe with effective M = 1 is bit-for-bit the sequential objective, so
+    # the two descriptions must be the same problem identity.
+    assert (_problem(schedule=PIPE, M=1).content_hash()
+            == _problem(schedule=SEQ).content_hash())
+    assert (_problem(b=8, schedule=PIPE, M=4).content_hash()
+            != _problem(b=8).content_hash())
+
+
+def test_problem_instance_validates_candidate_count():
+    with pytest.raises(ValueError):
+        _problem(K=4)
+
+
+def test_serve_solve_key_and_sweep_instance_key_agree():
+    spec = ScenarioSpec(topology="nsfnet", topology_kwargs={"source": "v4"},
+                        profile="resnet101", source="v4", destination="v13",
+                        batch_size=2, mode=IF, K=3, solver="bcd",
+                        candidates=[list(c) for c in CANDS])
+    fleet = generate_fleet(spec.build_network(), 1, "v4", "v13", 2, IF, 3,
+                           candidates=[list(c) for c in CANDS],
+                           batch_spread=(1,), model_id="resnet101")
+    net, profile = spec.build_network(), spec.build_profile()
+    assert fleet[0].solve_key(net, profile) == spec.instance_key()
+    # the identity is the ProblemInstance content hash in both layers
+    assert spec.instance_key() == spec.problem().content_hash()
+
+
+def test_fleet_spec_has_no_single_problem():
+    spec = ScenarioSpec(topology="nsfnet", topology_kwargs={"source": "v4"},
+                        profile="resnet101", source="v4", destination="v13",
+                        batch_size=2, mode=IF, K=3, solver="bcd", n_requests=4)
+    with pytest.raises(ValueError):
+        spec.problem()
+
+
+# ------------------------------------------------------------- capabilities
+def test_unknown_solver_error_lists_registered_names():
+    with pytest.raises(ValueError) as ei:
+        get_solver("magic")
+    assert "magic" in str(ei.value) and "bcd" in str(ei.value)
+
+
+def test_ilp_pipe_rejection_is_uniform_and_actionable():
+    msgs = []
+    with pytest.raises(ValueError) as e1:
+        ScenarioSpec(topology="nsfnet", topology_kwargs={"source": "v4"},
+                     profile="resnet101", source="v4", destination="v13",
+                     batch_size=8, mode=IF, K=3, solver="ilp",
+                     schedule="pipe", n_microbatches=4)
+    msgs.append(str(e1.value))
+    with pytest.raises(ValueError) as e2:
+        solve(_problem(b=8, schedule=PIPE, M=4), "ilp")
+    msgs.append(str(e2.value))
+    from repro.core.ilp import ilp_solve as raw_ilp
+    with pytest.raises(ValueError) as e3:
+        raw_ilp(NET, PROF, _problem(b=8, schedule=PIPE, M=4).request, 3,
+                [list(c) for c in CANDS])
+    msgs.append(str(e3.value))
+    for m in msgs:
+        assert "'ilp'" in m and "seq" in m  # names the solver and its limits
+        assert "bcd" in m  # and points at solvers that do support pipe
+    assert len(set(msgs)) == 1  # one check, one message, every layer
+
+
+def test_ilp_pipe_depth_one_is_allowed():
+    ok, _ = solver_supports("ilp", schedule=PIPE, batch_size=1,
+                            n_microbatches=8)
+    assert ok  # clamps to M=1 == sequential
+    assert ensure_solver_supported("ilp", _problem(schedule=SEQ)).name == "ilp"
+
+
+def test_solver_supports_with_problem_instance():
+    ok, reason = solver_supports("ilp", _problem(b=8, schedule=PIPE, M=4))
+    assert not ok and "ilp" in reason
+    assert solver_supports("exact", _problem(b=8, schedule=PIPE, M=4))[0]
+
+
+# ------------------------------------------------------------ legacy shims
+def test_deprecation_shims_warn_once_and_match_engine_bit_for_bit():
+    problem = _problem(b=2, mode=TR)
+    shim = deprecated_solver_alias("bcd", "bcd_solve_test_alias")
+    _WARNED_ALIASES.discard("bcd_solve_test_alias")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r1 = shim(*problem.solver_args())
+        r2 = shim(*problem.solver_args())
+    deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(deps) == 1  # exactly once per process, not per call
+    out = solve(problem, "bcd")
+    for r in (r1, r2):
+        assert r.plan == out.plan
+        assert r.latency_s == out.objective
+
+
+def test_all_five_legacy_shims_dispatch_to_registry():
+    import repro.core as core
+
+    problem = _problem(profile=SMALL_PROF)  # small L keeps the MILP fast
+    for alias, name in [("bcd_solve", "bcd"), ("exact_solve", "exact"),
+                        ("ilp_solve", "ilp"), ("comp_ms_solve", "comp-ms"),
+                        ("comm_ms_solve", "comm-ms")]:
+        shim = getattr(core, alias)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            res = shim(*problem.solver_args())
+        assert res.plan == solve(problem, name).plan
+
+
+# --------------------------------------------------------------- portfolio
+def test_portfolio_never_worse_than_members_on_nsfnet_grid():
+    members = ("bcd", "comp-ms", "comm-ms")
+    cache = EvalCache()
+    for mode, b in ((IF, 2), (IF, 128), (TR, 2), (TR, 128)):
+        for seed in range(3):
+            cands = tuple(tuple(c) for c in
+                          candidate_sets(3, seed, sorted(NET.nodes),
+                                         "v4", "v13"))
+            problem = _problem(b=b, mode=mode, cands=cands)
+            pf = solve(problem, "portfolio", cache=cache,
+                       members=members)
+            assert pf.feasible
+            per_member = [solve(problem, m, cache=cache) for m in members]
+            for m, res in zip(members, per_member):
+                if res.feasible:
+                    assert pf.objective <= res.objective + 1e-12, m
+            assert pf.objective == min(r.objective for r in per_member
+                                       if r.feasible)
+            assert pf.stats["winner"] in members
+            assert set(pf.stats["members"]) == set(members)
+
+
+def test_portfolio_inherits_optimality_from_optimal_member():
+    out = solve(_problem(), "portfolio", members=("exact", "bcd"))
+    assert out.status == "optimal"
+    assert solve(_problem(), "portfolio").status == "feasible"
+
+
+def test_portfolio_skips_unsupported_members():
+    out = solve(_problem(b=8, schedule=PIPE, M=4), "portfolio",
+                members=("ilp", "bcd"))
+    assert out.feasible
+    assert out.stats["members"]["ilp"]["status"] == "unsupported"
+    assert out.stats["winner"] == "bcd"
+
+
+def test_portfolio_rejects_meta_members_and_empty_sets():
+    with pytest.raises(ValueError):
+        solve(_problem(), "portfolio", members=("portfolio",))
+    with pytest.raises(ValueError):
+        solve(_problem(), "portfolio", members=())
+
+
+def test_portfolio_runs_through_sweep():
+    spec = ScenarioSpec(topology="nsfnet", topology_kwargs={"source": "v4"},
+                        profile="resnet101", source="v4", destination="v13",
+                        batch_size=2, mode=IF, K=3, solver="portfolio",
+                        candidates=[list(c) for c in CANDS])
+    res = run_scenario(spec, use_context_cache=False)
+    assert res.feasible and res.status == "feasible"
+    assert res.solver_stats["winner"] in res.solver_stats["members"]
+    bcd = run_scenario(ScenarioSpec.from_dict(
+        {**spec.to_dict(), "solver": "bcd"}), use_context_cache=False)
+    assert res.latency_s <= bcd.latency_s + 1e-12
+
+
+# ------------------------------------------- third-party solver registration
+def test_third_party_solver_end_to_end_through_sweep():
+    @register_solver("toy-first-fit", schedules=(SEQ,),
+                     description="test-only: bcd plan passthrough")
+    def toy_solve(net, profile, request, K, candidates, cache=None):
+        from repro.core.bcd import bcd_solve as raw_bcd
+
+        res = raw_bcd(net, profile, request, K, candidates, cache=cache)
+        return SolveResult(res.plan, res.latency, res.wall_time_s,
+                           solver="toy-first-fit")
+
+    try:
+        assert "toy-first-fit" in solver_names()
+        out = solve(_problem(), "toy-first-fit")
+        assert out.feasible and out.status == "feasible"
+        # sweepable with zero further wiring: spec validation, dispatch,
+        # and result recording all come from the registry
+        spec = ScenarioSpec(topology="nsfnet",
+                            topology_kwargs={"source": "v4"},
+                            profile="resnet101", source="v4",
+                            destination="v13", batch_size=2, mode=IF, K=3,
+                            solver="toy-first-fit",
+                            candidates=[list(c) for c in CANDS])
+        res = run_scenario(spec, use_context_cache=False)
+        assert res.feasible and res.status == "feasible"
+        # capability checks apply to third-party solvers too (seq only)
+        with pytest.raises(ValueError):
+            ScenarioSpec.from_dict({**spec.to_dict(), "schedule": "pipe",
+                                    "batch_size": 8, "n_microbatches": 4})
+    finally:
+        unregister_solver("toy-first-fit")
+    with pytest.raises(ValueError):
+        get_solver("toy-first-fit")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+        register_solver("bcd")(lambda *a, **k: None)
+
+
+# -------------------------------------------------- engine vs legacy parity
+def _dedupe_single_chain(specs):
+    seen, out = set(), []
+    for s in specs:
+        if s.n_requests == 1 and s.spec_hash() not in seen:
+            seen.add(s.spec_hash())
+            out.append(s)
+    return out
+
+
+@pytest.mark.parametrize("suite,specs", [
+    ("nsfnet_paper", _dedupe_single_chain(
+        nsfnet_paper(quick=True, seeds=1))),
+    ("nsfnet_pipeline", _dedupe_single_chain(nsfnet_pipeline(quick=True))),
+])
+def test_engine_and_legacy_paths_identical_on_suites(suite, specs):
+    """Acceptance: for every (instance, solver) pair of the paper suites the
+    engine entry point and the legacy ``*_solve`` signature produce identical
+    plans and objectives."""
+    assert specs
+    clear_context()
+    cache = EvalCache()
+    # all specs of these suites share one (topology, profile) cell: reuse the
+    # built objects so the frontier caches are shared like a real sweep run
+    net, profile = specs[0].build_network(), specs[0].build_profile()
+    for spec in specs:
+        problem = spec.problem(net, profile)
+        out = solve(problem, spec.solver, cache=cache, **spec.solver_kwargs)
+        raw = get_solver(spec.solver).fn(  # the legacy call signature
+            *problem.solver_args(), cache=cache, **spec.solver_kwargs)
+        assert out.feasible == raw.feasible, spec.scenario_id()
+        if out.feasible:
+            assert out.plan == raw.plan, spec.scenario_id()
+            assert out.objective == raw.latency_s, spec.scenario_id()
+
+
+def test_portfolio_dominates_members_on_suite_instances():
+    """Acceptance: on every quick-tier instance of nsfnet_paper and
+    nsfnet_pipeline, the portfolio's objective is <= every member's."""
+    instances, seen = [], set()
+    for spec in (nsfnet_paper(quick=True) + nsfnet_pipeline(quick=True)):
+        key = spec.group_key()
+        if spec.n_requests == 1 and key not in seen:
+            seen.add(key)
+            instances.append(spec)
+    cache = EvalCache()
+    net, profile = instances[0].build_network(), instances[0].build_profile()
+    members = ("bcd", "comp-ms", "comm-ms")
+    for spec in instances:
+        problem = spec.problem(net, profile)
+        pf = solve(problem, "portfolio", cache=cache, members=members)
+        feas = {}
+        for m in members:
+            res = solve(problem, m, cache=cache)
+            if res.feasible:
+                feas[m] = res.objective
+                assert pf.objective <= res.objective + 1e-12, (
+                    spec.scenario_id(), m)
+        assert pf.feasible == bool(feas)
+        if feas:
+            assert pf.objective == min(feas.values())
+            assert pf.stats["winner"] == min(feas, key=feas.get)
+
+
+def test_outcome_status_vocabulary():
+    out = solve(_problem(), "exact")
+    assert out.status == "optimal" and out.objective == out.latency_s
+    out = solve(_problem(), "bcd")
+    assert out.status == "feasible"
+    # starved instance: the batch's smashed-data memory exceeds every node
+    starved = _problem(b=10**9, mode=TR)
+    assert solve(starved, "bcd").status == "infeasible"
+    assert isinstance(solve(starved, "bcd"), SolveOutcome)

@@ -1,0 +1,50 @@
+"""Public-API snapshot: `repro.core.__all__` is a contract — accidental export
+churn (a refactor dropping or silently adding names) must fail loudly here and
+be updated deliberately, together with docs/solvers.md."""
+import repro.core as core
+
+# The deliberate export surface.  Update this snapshot (and docs) when the API
+# intentionally changes; an unexplained diff is a regression.
+CORE_ALL_SNAPSHOT = (
+    # cost-model vocabulary
+    "BW", "FW", "IF", "TR", "SEQ", "PIPE", "SCHEDULES",
+    "effective_microbatches",
+    "CPU_XEON_6226R", "GPU_RTX_A6000", "ComputeModel",
+    "EvalCache", "LayerProfile", "ModelProfile", "LatencyBreakdown",
+    "Plan", "PlanEvaluator", "ServiceChainRequest",
+    # engine: problem / solver / outcome
+    "OPTIMAL", "FEASIBLE", "INFEASIBLE", "STATUSES",
+    "ProblemInstance", "SolveOutcome", "SolveResult", "SolverInfo",
+    "register_solver", "unregister_solver", "solve", "solver_names",
+    "solver_supports", "ensure_solver_supported", "get_solver",
+    "solver_capabilities", "portfolio_solve", "PORTFOLIO_DEFAULT_MEMBERS",
+    # network + legacy solver surface
+    "LinkSpec", "NodeSpec", "PhysicalNetwork", "SOLVERS",
+    "bcd_solve", "exact_solve", "ilp_solve", "comp_ms_solve", "comm_ms_solve",
+    "dfts", "k_sequence_segmentation",
+    "candidate_sets", "nsfnet", "random_network", "tpu_pod_topology",
+    "resnet101_profile",
+    "even_split", "segments_from_sizes", "cuts_from_segments",
+    "validate_segments",
+    "transmission_time_s", "tpu_group_compute_model",
+)
+
+
+def test_core_all_matches_snapshot():
+    assert sorted(core.__all__) == sorted(CORE_ALL_SNAPSHOT), (
+        "repro.core.__all__ drifted from the snapshot; if the change is "
+        "intentional update tests/test_public_api.py and docs/solvers.md")
+    assert len(set(core.__all__)) == len(core.__all__), "duplicate exports"
+
+
+def test_core_all_names_exist_and_are_importable():
+    for name in core.__all__:
+        assert hasattr(core, name), f"__all__ exports missing name {name!r}"
+
+
+def test_builtin_solvers_registered():
+    names = core.solver_names()
+    for required in ("ilp", "exact", "bcd", "comp-ms", "comm-ms", "portfolio"):
+        assert required in names
+    # the legacy dict view is derived from the registry, never hand-written
+    assert set(core.SOLVERS) == set(names)
