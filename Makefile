@@ -8,9 +8,11 @@ verify: test sweep-quick
 
 ## verify-fast: the core dev loop (<40s) — deselects the multi-minute
 ## jax-stack tests (pytest -m slow: shard_map subprocess runs, kernel
-## sweeps, dry-runs) and runs one quick serving sweep
+## sweeps, dry-runs) and runs quick serving sweeps: one static admission
+## round and one event-driven churn suite (exercises the ServeSim loop)
 verify-fast: test-fast
-	$(PYTHON) -m repro.sweep --suite nsfnet_multirequest --quick --out sweep_out
+	$(PYTHON) -m repro.sweep --suite nsfnet_multirequest nsfnet_churn \
+		--quick --out sweep_out
 
 ## test: tier-1 test suite (ROADMAP.md)
 test:

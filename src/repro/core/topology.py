@@ -73,7 +73,13 @@ def random_network(
             net.add_node(NodeSpec(name, CPU_XEON_6226R, 8 * GB, 8 * GB))
         else:
             net.add_node(NodeSpec(name, GPU_RTX_A6000, 2 * GB, 2 * GB))
-    edges = {(i, (i + 1) % n_nodes) for i in range(n_nodes)}  # connectivity ring
+    # Connectivity ring, normalized to (min, max) like the random edges below:
+    # the wraparound pair {v1, vN} must be stored as (0, n-1), not (n-1, 0),
+    # or a random draw of (0, n-1) would re-add the same undirected link —
+    # silently overwriting it, double-counting the edge in sorted(edges), and
+    # shifting the seeded delay stream.
+    edges = {tuple(sorted((i, (i + 1) % n_nodes))) for i in range(n_nodes)
+             if n_nodes > 1}
     for i in range(n_nodes):
         for j in range(i + 1, n_nodes):
             if rng.random() < p:
@@ -91,7 +97,14 @@ def candidate_sets(K: int, seed: int, nodes: list[str],
     candidate nodes."""
     rng = random.Random(seed * 1000 + K)
     mids = [n for n in nodes if n not in (source, dest)]
-    picked = rng.sample(mids, per_stage * (K - 2)) if K > 2 else []
+    n_needed = per_stage * (K - 2)
+    if n_needed > len(mids):
+        raise ValueError(
+            f"candidate_sets: K={K} with per_stage={per_stage} needs "
+            f"{n_needed} distinct intermediate nodes but only {len(mids)} "
+            f"are available (|nodes|={len(nodes)} minus source/destination); "
+            f"lower K or per_stage, or use a larger topology")
+    picked = rng.sample(mids, n_needed) if K > 2 else []
     cands = [[source]]
     for k in range(K - 2):
         cands.append(picked[per_stage * k : per_stage * (k + 1)])

@@ -7,18 +7,28 @@ node memory/disk by placed sub-models), pluggable admission policies, and
 capacity-aware replanning against the residual network before a request is
 declared blocked.  See docs/serve.md.
 
+`ServeSim` layers an event-driven *dynamic* admission process on top:
+chains arrive, hold their reservation for ``duration_s``, and depart —
+releasing their exact demand back to the fabric, with an optional retry
+queue for capacity-blocked requests.  See docs/sim.md.
+
 CLI:  ``PYTHONPATH=src python -m repro.serve --n-requests 16 --policy fcfs``
+      ``PYTHONPATH=src python -m repro.serve --sim --hold-model exp \\
+          --duration-s 4 --arrival poisson --retry``
 """
 from repro.core import SOLVERS  # legacy re-export; use repro.core.solve(...)
 
 from .planner import ServedRequest, ServeOutcome, ServePlanner, replay_verify
 from .policies import POLICIES, POLICY_NAMES
-from .requests import ARRIVALS, BATCH_SPREAD, ServeRequest, generate_fleet
+from .requests import (ARRIVALS, BATCH_SPREAD, HOLD_MODELS, ServeRequest,
+                       generate_fleet)
 from .residual import PlanDemand, ResidualState, effective_rate_rps, plan_demand
+from .sim import ServeSim, SimOutcome, replay_verify_sim
 
 __all__ = [
-    "ARRIVALS", "BATCH_SPREAD", "POLICIES", "POLICY_NAMES", "SOLVERS",
-    "PlanDemand", "ResidualState", "ServeOutcome", "ServePlanner",
-    "ServeRequest", "ServedRequest", "effective_rate_rps", "generate_fleet",
-    "plan_demand", "replay_verify",
+    "ARRIVALS", "BATCH_SPREAD", "HOLD_MODELS", "POLICIES", "POLICY_NAMES",
+    "SOLVERS", "PlanDemand", "ResidualState", "ServeOutcome", "ServePlanner",
+    "ServeRequest", "ServeSim", "ServedRequest", "SimOutcome",
+    "effective_rate_rps", "generate_fleet", "plan_demand", "replay_verify",
+    "replay_verify_sim",
 ]

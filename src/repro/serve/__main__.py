@@ -19,7 +19,8 @@ from repro.core import solver_names, solver_supports
 
 from .planner import ServePlanner
 from .policies import POLICY_NAMES
-from .requests import ARRIVALS, generate_fleet
+from .requests import ARRIVALS, HOLD_MODELS, generate_fleet
+from .sim import ServeSim
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -50,8 +51,27 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--solver", default="bcd", choices=sorted(solver_names()))
     ap.add_argument("--no-replan", action="store_true",
                     help="disable capacity-aware replanning on rejection")
+    ap.add_argument("--sim", action="store_true",
+                    help="event-driven dynamic admission with chain "
+                         "departures (docs/sim.md) instead of one static round")
+    ap.add_argument("--hold-model", default="none", choices=HOLD_MODELS,
+                    help="holding-time model for --sim fleets: none = hold "
+                         "forever, fixed / exp = --duration-s holds")
+    ap.add_argument("--duration-s", type=float, default=None,
+                    help="holding time (fixed) or mean holding time (exp)")
+    ap.add_argument("--retry", action="store_true",
+                    help="--sim: queue capacity-blocked requests and retry "
+                         "them when a departure frees room")
     ap.add_argument("--json", default=None, help="write summary + records here")
     args = ap.parse_args(argv)
+    if args.hold_model != "none" and args.duration_s is None:
+        ap.error(f"--hold-model {args.hold_model} requires --duration-s")
+    if args.duration_s is not None and args.hold_model == "none":
+        ap.error("--duration-s requires --hold-model fixed|exp "
+                 "(it would be silently ignored otherwise)")
+    if ((args.hold_model != "none" or args.duration_s is not None
+         or args.retry) and not args.sim):
+        ap.error("--hold-model/--duration-s/--retry only apply with --sim")
     # No batch_size: the fleet's batch spread means some requests may pipeline
     # deeper than the base batch clamps, so check the unclamped depth.
     ok, reason = solver_supports(args.solver, schedule=args.schedule,
@@ -70,20 +90,33 @@ def main(argv: list[str] | None = None) -> int:
         net, args.n_requests, args.source, args.destination, args.batch_size,
         args.mode, args.K, seed=args.seed, arrival=args.arrival,
         rate_rps=args.rate_rps, model_id=args.profile,
-        schedule=args.schedule, n_microbatches=args.n_microbatches)
-    planner = ServePlanner(net, profile, solver=args.solver,
-                           replan=not args.no_replan)
-    outcome = planner.admit(fleet, policy=args.policy)
+        schedule=args.schedule, n_microbatches=args.n_microbatches,
+        hold_model=args.hold_model,
+        hold_time_s=(args.duration_s if args.duration_s is not None
+                     else float("inf")))
+    if args.sim:
+        sim = ServeSim(net, profile, solver=args.solver,
+                       replan=not args.no_replan, retry=args.retry)
+        outcome = sim.run(fleet, policy=args.policy)
+    else:
+        planner = ServePlanner(net, profile, solver=args.solver,
+                               replan=not args.no_replan)
+        outcome = planner.admit(fleet, policy=args.policy)
 
+    extra = f" {'admit':>8} {'depart':>8} {'retry':>5}" if args.sim else ""
     print(f"{'id':>4} {'arrive':>8} {'b':>4} {'mode':>4} "
-          f"{'admitted':>8} {'replan':>6} {'latency_ms':>11}  placement")
+          f"{'admitted':>8} {'replan':>6} {'latency_ms':>11}{extra}  placement")
     for s in outcome.served:
         r = s.request
         lat = "-" if s.latency_s is None else f"{s.latency_s * 1e3:.2f}"
         place = "->".join(s.plan.placement) if (s.accepted and s.plan) else s.reason
+        if args.sim:
+            adm = "-" if s.admit_s is None else f"{s.admit_s:.3f}"
+            dep = "-" if s.depart_s is None else f"{s.depart_s:.3f}"
+            extra = f" {adm:>8} {dep:>8} {s.n_retries:>5}"
         print(f"{r.request_id:>4} {r.arrival_s:>8.3f} {r.batch_size:>4} "
               f"{r.mode:>4} {str(s.accepted):>8} {str(s.replanned):>6} "
-              f"{lat:>11}  {place}")
+              f"{lat:>11}{extra}  {place}")
     summary = outcome.summary()
     pct = {k: (f"{v * 1e3:.2f}ms" if v is not None else "-")
            for k, v in summary.items() if k.startswith("latency_p")}
@@ -93,6 +126,12 @@ def main(argv: list[str] | None = None) -> int:
           f"p50/p95/p99 {pct['latency_p50_s']}/{pct['latency_p95_s']}/"
           f"{pct['latency_p99_s']}, {summary['wall_time_s']:.2f}s",
           file=sys.stderr)
+    if args.sim:
+        print(f"# sim: horizon {outcome.horizon_s:.3f}s, "
+              f"{outcome.n_departed} departed, "
+              f"peak {outcome.peak_concurrent} concurrent, "
+              f"{outcome.n_retried} admitted via retry, "
+              f"blocking {outcome.blocking_probability:.2f}", file=sys.stderr)
     if args.json:
         doc = {"summary": summary,
                "served": [s.to_dict() for s in outcome.served]}

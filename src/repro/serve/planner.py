@@ -39,7 +39,7 @@ INF = float("inf")
 
 @dataclass
 class ServedRequest:
-    """Admission outcome of one request (in admission order)."""
+    """Admission outcome of one request (in admission/decision order)."""
 
     request: ServeRequest
     accepted: bool
@@ -47,6 +47,11 @@ class ServedRequest:
     latency_s: float | None = None
     plan: Plan | None = None
     reason: str = ""  # "" | "no-plan" | "capacity"
+    status: str | None = None  # SolveOutcome.status of the winning solve
+    # Event-driven fields (ServeSim, docs/sim.md); None for static rounds.
+    admit_s: float | None = None  # admission timestamp (>= arrival on retry)
+    depart_s: float | None = None  # admit_s + duration_s when finite
+    n_retries: int = 0  # failed capacity attempts before the final decision
 
     def to_dict(self) -> dict:
         r = self.request
@@ -63,10 +68,16 @@ class ServedRequest:
             "model_id": r.model_id,
             "schedule": r.schedule,
             "n_microbatches": r.n_microbatches,
+            # inf round-trips as null so the artifacts stay strict JSON
+            "duration_s": None if r.duration_s == INF else r.duration_s,
             "accepted": self.accepted,
             "replanned": self.replanned,
             "latency_s": self.latency_s,
             "reason": self.reason,
+            "status": self.status,
+            "admit_s": self.admit_s,
+            "depart_s": self.depart_s,
+            "n_retries": self.n_retries,
         }
         if self.plan is not None:
             d["segments"] = [list(s) for s in self.plan.segments]
@@ -77,6 +88,7 @@ class ServedRequest:
 
     @classmethod
     def from_dict(cls, d: dict) -> "ServedRequest":
+        duration = d.get("duration_s")
         req = ServeRequest(
             request_id=d["request_id"], source=d["source"],
             destination=d["destination"], batch_size=d["batch_size"],
@@ -84,7 +96,8 @@ class ServedRequest:
             candidates=tuple(tuple(c) for c in d["candidates"]),
             arrival_s=d["arrival_s"], rate_rps=d["rate_rps"],
             model_id=d["model_id"], schedule=d.get("schedule", "seq"),
-            n_microbatches=d.get("n_microbatches", 1))
+            n_microbatches=d.get("n_microbatches", 1),
+            duration_s=INF if duration is None else duration)
         plan = None
         if "segments" in d:
             plan = Plan(segments=[tuple(s) for s in d["segments"]],
@@ -92,7 +105,8 @@ class ServedRequest:
                         paths=[list(p) for p in d["paths"]],
                         tail_path=list(d["tail_path"]))
         return cls(req, d["accepted"], d["replanned"], d["latency_s"], plan,
-                   d.get("reason", ""))
+                   d.get("reason", ""), d.get("status"), d.get("admit_s"),
+                   d.get("depart_s"), d.get("n_retries", 0))
 
 
 @dataclass
@@ -121,6 +135,29 @@ class ServeOutcome:
     def acceptance_ratio(self) -> float:
         return self.n_accepted / self.n_requests if self.served else 0.0
 
+    @property
+    def status(self) -> str:
+        """Aggregate engine status of the round: ``optimal`` when every
+        accepted chain's winning solve (snapshot or replan) was optimal,
+        ``feasible`` when at least one chain was admitted, ``infeasible``
+        otherwise.  This is per-chain solver optimality — the admission
+        *order* itself is a heuristic either way."""
+        acc = [s.status for s in self.served if s.accepted]
+        if not acc:
+            return "infeasible"
+        return "optimal" if all(st == "optimal" for st in acc) else "feasible"
+
+    def solver_stats(self) -> dict:
+        """Per-round solve bookkeeping for sweep artifacts (``solver_stats``
+        column): distinct shapes pre-solved, replans, per-status counts."""
+        counts: dict[str, int] = {}
+        for s in self.served:
+            if s.status is not None:
+                counts[s.status] = counts.get(s.status, 0) + 1
+        return {"n_presolved": self.n_presolved,
+                "n_replanned": self.n_replanned,
+                "statuses": counts}
+
     def accepted_latencies(self) -> list[float]:
         return [s.latency_s for s in self.served
                 if s.accepted and s.latency_s is not None]
@@ -138,6 +175,7 @@ class ServeOutcome:
         return {
             "policy": self.policy,
             "solver": self.solver,
+            "status": self.status,
             "n_requests": self.n_requests,
             "n_accepted": self.n_accepted,
             "n_replanned": self.n_replanned,
@@ -173,14 +211,13 @@ class ServePlanner:
         return solve(request.problem(net, self.profile), self.solver_name,
                      cache=cache, **self.solver_kwargs)
 
-    def admit(self, requests: list[ServeRequest],
-              policy: str = "fcfs") -> ServeOutcome:
-        if policy not in POLICIES:
-            raise ValueError(f"policy must be one of {sorted(POLICIES)}")
-        t0 = time.perf_counter()
-
-        # 1. pre-solve each distinct request shape on the snapshot, deduped by
-        # ProblemInstance content hash (the engine-wide instance identity)
+    def presolve(self, requests: list[ServeRequest]
+                 ) -> tuple[dict[str, SolveOutcome], dict[int, str],
+                            dict[int, float]]:
+        """Solve each distinct request shape once on the snapshot network,
+        deduped by ProblemInstance content hash (the engine-wide instance
+        identity).  Returns (outcome by key, key by request id, solo-latency
+        estimate by request id — the policies' ordering input)."""
         presolved: dict[str, SolveOutcome] = {}
         keys: dict[int, str] = {}
         estimates: dict[int, float] = {}
@@ -189,6 +226,63 @@ class ServePlanner:
             if key not in presolved:
                 presolved[key] = self._solve(self.net, r, self.cache)
             estimates[r.request_id] = presolved[key].latency_s
+        return presolved, keys, estimates
+
+    def attempt(self, state: ResidualState, r: ServeRequest,
+                snapshot: SolveOutcome,
+                res_net_cache: dict | None = None
+                ) -> tuple[Plan | None, bool, str | None, str]:
+        """One admission attempt against the live residuals: try the
+        snapshot plan, else replan on the materialized residual network.
+        Returns ``(plan | None, replanned, status, reason)`` — the shared
+        core of the static :meth:`admit` round and the event-driven
+        :class:`~repro.serve.sim.ServeSim` arrivals/retries.
+
+        ``res_net_cache`` (a per-mode dict) memoizes the materialized
+        residual network across *consecutive failed* attempts — the caller
+        must clear it whenever `state` changes (any commit/release), since a
+        stale residual view would admit against freed/occupied capacity that
+        no longer matches."""
+        plan = snapshot.plan
+        if plan is None:
+            return None, False, snapshot.status, "no-plan"
+        if state.fits(self.profile, r, plan):
+            return plan, False, snapshot.status, ""
+        if self.replan:
+            # replan only capacity-blocked requests: if even the uncontended
+            # snapshot had no feasible plan, the strictly tighter residual
+            # network cannot have one either
+            res_net = (res_net_cache.get(r.mode)
+                       if res_net_cache is not None else None)
+            if res_net is None:
+                res_net = state.materialize(r.mode)
+                if res_net_cache is not None:
+                    res_net_cache[r.mode] = res_net
+            res = self._solve(res_net, r, self.cache.fork_fits())
+            if res.plan is not None and state.fits(self.profile, r, res.plan):
+                return res.plan, True, res.status, ""
+        return None, False, snapshot.status, "capacity"
+
+    def commit_latency_s(self, state: ResidualState, r: ServeRequest,
+                         plan: Plan) -> float:
+        """Commit an admitted plan and return its latency, evaluated on the
+        residual fabric the request was admitted onto (keeping saturated
+        links: a zero-demand tail may legitimately cross them)."""
+        ev = PlanEvaluator(state.materialize(keep_saturated=True),
+                           self.profile, r.chain_request())
+        latency = ev.latency_s(plan)
+        state.commit(self.profile, r, plan)
+        return latency
+
+    def admit(self, requests: list[ServeRequest],
+              policy: str = "fcfs") -> ServeOutcome:
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {sorted(POLICIES)}")
+        t0 = time.perf_counter()
+
+        # 1. pre-solve each distinct request shape on the snapshot, deduped by
+        # ProblemInstance content hash (the engine-wide instance identity)
+        presolved, keys, estimates = self.presolve(requests)
 
         # 2. policy order
         order = POLICIES[policy](requests, estimates)
@@ -197,31 +291,17 @@ class ServePlanner:
         state = ResidualState(self.net)
         served: list[ServedRequest] = []
         for r in order:
-            plan = presolved[keys[r.request_id]].plan
-            chosen, replanned = None, False
-            if plan is not None and state.fits(self.profile, r, plan):
-                chosen = plan
-            elif self.replan and plan is not None:
-                # replan only capacity-blocked requests: if even the
-                # uncontended snapshot had no feasible plan, the strictly
-                # tighter residual network cannot have one either
-                res_net = state.materialize(r.mode)
-                res = self._solve(res_net, r, self.cache.fork_fits())
-                if res.plan is not None and state.fits(self.profile, r, res.plan):
-                    chosen, replanned = res.plan, True
+            snapshot = presolved[keys[r.request_id]]
+            chosen, replanned, status, reason = self.attempt(state, r, snapshot)
             if chosen is None:
                 served.append(ServedRequest(
-                    r, False, replanned=False, plan=plan,
-                    reason="no-plan" if plan is None else "capacity"))
+                    r, False, replanned=False, plan=snapshot.plan,
+                    reason=reason, status=status))
                 continue
-            # latency on the residual fabric this request was admitted onto
-            # (keep saturated links: a zero-demand tail may cross them)
-            ev = PlanEvaluator(state.materialize(keep_saturated=True),
-                               self.profile, r.chain_request())
-            latency = ev.latency_s(chosen)
-            state.commit(self.profile, r, chosen)
+            latency = self.commit_latency_s(state, r, chosen)
             served.append(ServedRequest(r, True, replanned=replanned,
-                                        latency_s=latency, plan=chosen))
+                                        latency_s=latency, plan=chosen,
+                                        status=status))
         assert state.conservation_ok(self.profile)
         return ServeOutcome(policy=policy, solver=self.solver_name,
                             served=served,

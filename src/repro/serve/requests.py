@@ -8,11 +8,14 @@ that converts the chain's smashed-data sizes into link-bandwidth demand.
 """
 from __future__ import annotations
 
+import math
 import random
 from dataclasses import dataclass, field
 
 from repro.core import (IF, SCHEDULES, SEQ, TR, ModelProfile, PhysicalNetwork,
                         ProblemInstance, ServiceChainRequest, candidate_sets)
+
+INF = float("inf")
 
 
 @dataclass(frozen=True)
@@ -31,6 +34,11 @@ class ServeRequest:
     model_id: str = "model"
     schedule: str = SEQ  # seq | pipe (see docs/pipeline.md)
     n_microbatches: int = 1
+    # Holding time: how long an admitted chain occupies its reservation before
+    # departing (docs/sim.md).  inf = holds forever, the static-admission
+    # behaviour; the event-driven ServeSim releases the chain's exact demand
+    # at arrival_s (admit time) + duration_s.
+    duration_s: float = INF
 
     def __post_init__(self) -> None:
         assert self.mode in (IF, TR)
@@ -38,6 +46,7 @@ class ServeRequest:
         assert self.rate_rps > 0
         assert self.schedule in SCHEDULES
         assert self.n_microbatches >= 1
+        assert self.duration_s > 0
 
     def chain_request(self) -> ServiceChainRequest:
         return ServiceChainRequest(self.model_id, self.source, self.destination,
@@ -69,6 +78,11 @@ BATCH_SPREAD = (1, 2, 4)
 
 ARRIVALS = ("batch", "poisson")
 
+# Holding-time models for generated fleets: "none" keeps every chain forever
+# (duration_s = inf, the static behaviour), "fixed" holds each chain exactly
+# `hold_time_s`, "exp" draws seeded Exponential(mean=hold_time_s) durations.
+HOLD_MODELS = ("none", "fixed", "exp")
+
 
 def generate_fleet(
     net: PhysicalNetwork,
@@ -88,23 +102,41 @@ def generate_fleet(
     batch_spread: tuple[int, ...] = BATCH_SPREAD,
     schedule: str = SEQ,
     n_microbatches: int = 1,
+    hold_model: str = "none",
+    hold_time_s: float = INF,
 ) -> list[ServeRequest]:
     """Deterministic seeded fleet of `n_requests` chains on one fabric.
 
     Request i gets batch size ``batch_size * batch_spread[i % len]``, its own
     seeded candidate sets (unless `candidates` pins them for every request),
-    and an arrival time: 0.0 for ``arrival="batch"`` or cumulative
-    Exponential(arrival_rate_rps) inter-arrivals for ``"poisson"``.
+    an arrival time — 0.0 for ``arrival="batch"`` or cumulative
+    Exponential(arrival_rate_rps) inter-arrivals for ``"poisson"`` — and a
+    holding time from `hold_model` (see :data:`HOLD_MODELS`).  Holding times
+    are drawn from a *dedicated* seeded stream, so a churn fleet and its
+    ``hold_model="none"`` counterpart share identical arrivals/candidates.
     """
     if arrival not in ARRIVALS:
         raise ValueError(f"arrival must be one of {ARRIVALS}, got {arrival!r}")
+    if hold_model not in HOLD_MODELS:
+        raise ValueError(
+            f"hold_model must be one of {HOLD_MODELS}, got {hold_model!r}")
+    if hold_model != "none" and not (hold_time_s > 0 and math.isfinite(hold_time_s)):
+        raise ValueError(f"hold_model={hold_model!r} needs a positive finite "
+                         f"hold_time_s, got {hold_time_s!r}")
     rng = random.Random(seed)
+    hold_rng = random.Random(seed * 7919 + 1)  # independent of the arrival stream
     nodes = sorted(net.nodes)
     fleet = []
     t = 0.0
     for i in range(n_requests):
         if arrival == "poisson":
             t += rng.expovariate(arrival_rate_rps)
+        if hold_model == "none":
+            duration = INF
+        elif hold_model == "fixed":
+            duration = hold_time_s
+        else:  # "exp"
+            duration = hold_rng.expovariate(1.0 / hold_time_s)
         if candidates is not None:
             cands = candidates
         else:
@@ -123,5 +155,6 @@ def generate_fleet(
             model_id=model_id,
             schedule=schedule,
             n_microbatches=n_microbatches,
+            duration_s=duration,
         ))
     return fleet

@@ -164,6 +164,36 @@ class ResidualState:
             self.used_disk[n] += s
         self.committed.append((request, plan))
 
+    def release(self, profile: ModelProfile, request: ServeRequest,
+                plan: Plan) -> None:
+        """Exact inverse of :meth:`commit`: a departing chain returns its
+        :class:`PlanDemand` to the fabric.
+
+        The demand is recomputed through the same shared ``eval_cache``, so
+        the subtracted floats are bit-identical to the ones :meth:`commit`
+        added; tallies driven to (numerically) zero are pruned so a fully
+        drained state compares clean against a fresh one.  Raises ``KeyError``
+        if the (request, plan) pair was never committed — releasing a chain
+        twice (or one that was never admitted) is a caller bug, and silently
+        subtracting would break :meth:`conservation_ok`, which re-derives
+        usage from the committed list."""
+        for i, (req, pl) in enumerate(self.committed):
+            if req == request and pl == plan:
+                del self.committed[i]
+                break
+        else:
+            raise KeyError(f"release of uncommitted chain "
+                           f"request_id={request.request_id}")
+        d = plan_demand(profile, request, plan, self.base, self.eval_cache)
+        for tally, demand in ((self.used_link_fw, d.link_fw_bps),
+                              (self.used_link_bw, d.link_bw_bps),
+                              (self.used_mem, d.node_mem_bytes),
+                              (self.used_disk, d.node_disk_bytes)):
+            for k, v in demand.items():
+                tally[k] -= v
+                if abs(tally[k]) <= _EPS_ABS:
+                    del tally[k]
+
     # ---------------------------------------------------------- materialization
     def materialize(self, mode: str | None = None,
                     keep_saturated: bool = False) -> PhysicalNetwork:

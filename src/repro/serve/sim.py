@@ -1,0 +1,325 @@
+"""ServeSim — deterministic event-driven serving under churn (docs/sim.md).
+
+The static :meth:`ServePlanner.admit` round admits a fleet once and every
+accepted chain holds its reservation forever.  Real serving is a *process*:
+chains arrive, hold fabric capacity for a finite time, and leave — the
+multi-cloud SFC setting (Bhamare et al.) and the companion SFC architecture
+paper (Hara & Sasabe) both evaluate admission over time.  `ServeSim` replays
+that process exactly:
+
+* **events** — one arrival event per distinct arrival timestamp (simultaneous
+  arrivals are ordered by the admission policy), one departure event per
+  admitted chain with a finite ``duration_s``.  Events are processed in
+  timestamp order; at equal timestamps departures are processed first, so
+  capacity freed "now" is available to arrivals "now".
+* **arrivals** run the same snapshot-fits / residual-replan / commit
+  admission as the static round (the shared :meth:`ServePlanner.attempt`),
+  against the residual state *at that instant*.
+* **departures** release the departing chain's exact :class:`PlanDemand`
+  through :meth:`ResidualState.release` — bit-identical floats to the ones
+  its commit added, so conservation holds at every event.
+* an optional **retry queue** parks capacity-blocked requests and re-attempts
+  them (in arrival order) whenever a departure frees room; requests still
+  queued when the event stream drains are finally rejected.
+
+With every ``duration_s = inf`` there are no departures and the simulation
+degenerates to the static admission round — bit-for-bit, which is the
+anchoring invariant (`tests/test_sim.py`).
+
+`replay_verify_sim` re-verifies a (possibly reloaded) trace from scratch:
+plans re-checked structurally, every commit re-checked against the residuals
+at its admission instant, and conservation re-derived after *every* event.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import ModelProfile, PhysicalNetwork, PlanEvaluator
+
+from .planner import INF, ServedRequest, ServeOutcome, ServePlanner
+from .policies import POLICIES
+from .requests import ServeRequest
+from .residual import ResidualState
+
+# Event priorities at equal timestamps: departures release capacity before
+# simultaneous arrivals (or retries) contend for it.
+_DEPART, _ARRIVE = 0, 1
+
+
+@dataclass
+class SimOutcome(ServeOutcome):
+    """One simulation run: the static round's fields plus the event trace.
+
+    ``served`` is in *decision* order (the order admit/reject decisions were
+    made); accepted records carry ``admit_s`` / ``depart_s`` / ``n_retries``,
+    which is the full trace — `replay_verify_sim` needs nothing else.
+    ``timeline`` is the per-event audit log (admit/depart/reject with the
+    concurrent-chain count after each event), from which the time-series
+    metrics derive.
+    """
+
+    retry: bool = False
+    horizon_s: float = 0.0  # timestamp of the last processed event
+    timeline: list = field(default_factory=list)
+
+    # ------------------------------------------------------------ churn metrics
+    @property
+    def n_departed(self) -> int:
+        return sum(1 for e in self.timeline if e["event"] == "depart")
+
+    @property
+    def n_retried(self) -> int:
+        """Chains admitted only after >= 1 failed capacity attempt."""
+        return sum(1 for s in self.served if s.accepted and s.n_retries > 0)
+
+    @property
+    def n_blocked(self) -> int:
+        """Requests finally rejected for capacity (not infeasibility)."""
+        return sum(1 for s in self.served
+                   if not s.accepted and s.reason == "capacity")
+
+    @property
+    def blocking_probability(self) -> float:
+        """Erlang-style blocking: capacity rejections over offered requests
+        (``no-plan`` rejections are infeasible on an empty fabric too, so
+        they are not *blocking* — they count in the denominator only)."""
+        return self.n_blocked / self.n_requests if self.served else 0.0
+
+    @property
+    def peak_concurrent(self) -> int:
+        return max((e["concurrent"] for e in self.timeline), default=0)
+
+    def concurrent_curve(self) -> list[tuple[float, int]]:
+        """(t, concurrently held chains) after every event."""
+        return [(e["t"], e["concurrent"]) for e in self.timeline]
+
+    def acceptance_curve(self) -> list[tuple[float, float]]:
+        """(t, cumulative accepted / decided) after every admit/reject."""
+        out, acc, dec = [], 0, 0
+        for e in self.timeline:
+            if e["event"] == "admit":
+                acc, dec = acc + 1, dec + 1
+            elif e["event"] == "reject":
+                dec += 1
+            else:
+                continue
+            out.append((e["t"], acc / dec))
+        return out
+
+    def epoch_percentiles(self, n_epochs: int = 4,
+                          qs: tuple[float, ...] = (50, 95, 99)) -> list[dict]:
+        """Latency percentiles of admitted chains, bucketed by admit-time
+        epoch (the horizon split into `n_epochs` equal windows) — shows how
+        contention moves the latency distribution over the run."""
+        end = self.horizon_s
+        width = end / n_epochs if end > 0 else 1.0
+        epochs = []
+        for e in range(n_epochs):
+            lo, hi = e * width, (e + 1) * width
+            lats = [s.latency_s for s in self.served
+                    if s.accepted and s.latency_s is not None
+                    and lo <= (s.admit_s or 0.0)
+                    and ((s.admit_s or 0.0) < hi or e == n_epochs - 1)]
+            row = {"epoch": e, "start_s": lo, "end_s": hi, "n": len(lats)}
+            for q in qs:
+                row[f"p{int(q)}"] = (float(np.percentile(np.asarray(lats), q))
+                                     if lats else None)
+            epochs.append(row)
+        return epochs
+
+    def sim_summary(self) -> dict:
+        """The JSON-able churn block sweep artifacts store alongside the
+        static summary fields (``ScenarioResult.sim``)."""
+        return {
+            "retry": self.retry,
+            "horizon_s": self.horizon_s,
+            "n_departed": self.n_departed,
+            "n_retried": self.n_retried,
+            "n_blocked": self.n_blocked,
+            "blocking_probability": self.blocking_probability,
+            "peak_concurrent": self.peak_concurrent,
+            "concurrent_curve": [[t, n] for t, n in self.concurrent_curve()],
+            "acceptance_curve": [[t, a] for t, a in self.acceptance_curve()],
+            "epochs": self.epoch_percentiles(),
+        }
+
+    def summary(self) -> dict:
+        s = super().summary()
+        s.update({
+            "retry": self.retry,
+            "horizon_s": self.horizon_s,
+            "n_departed": self.n_departed,
+            "n_retried": self.n_retried,
+            "blocking_probability": self.blocking_probability,
+            "peak_concurrent": self.peak_concurrent,
+        })
+        return s
+
+
+class ServeSim:
+    """Event-driven dynamic admission on one fabric.
+
+    Thin orchestration over the existing machinery: pre-solve + per-arrival
+    admission delegate to a :class:`ServePlanner` (same solver registry,
+    caches, and replan behaviour), capacity accounting to
+    :class:`ResidualState` (`commit` on admit, `release` on departure).
+    """
+
+    def __init__(self, net: PhysicalNetwork, profile: ModelProfile,
+                 solver: str = "bcd", replan: bool = True,
+                 retry: bool = False, cache=None,
+                 solver_kwargs: dict | None = None):
+        self.planner = ServePlanner(net, profile, solver=solver, replan=replan,
+                                    cache=cache, solver_kwargs=solver_kwargs)
+        self.retry = retry
+
+    def run(self, requests: list[ServeRequest],
+            policy: str = "fcfs") -> SimOutcome:
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {sorted(POLICIES)}")
+        t0 = time.perf_counter()
+        planner = self.planner
+        profile = planner.profile
+        presolved, keys, estimates = planner.presolve(requests)
+
+        # one arrival event per distinct timestamp; the admission policy
+        # orders simultaneous arrivals (so a batch fleet reproduces the
+        # static round's policy order exactly)
+        batches: dict[float, list[ServeRequest]] = {}
+        for r in requests:
+            batches.setdefault(r.arrival_s, []).append(r)
+        tick = itertools.count()  # deterministic heap tie-break
+        heap: list[tuple] = [(t, _ARRIVE, next(tick), batch)
+                             for t, batch in batches.items()]
+        heapq.heapify(heap)
+
+        state = ResidualState(planner.net)
+        served: list[ServedRequest] = []
+        timeline: list[dict] = []
+        pending: list[ServeRequest] = []  # capacity-blocked, awaiting retry
+        retries: dict[int, int] = {}
+        concurrent = 0
+        horizon = 0.0
+
+        # Residual-network memo for planner.attempt, shared across the
+        # *failed* attempts of one arrival batch / retry drain (the state is
+        # unchanged between them); any commit or release invalidates it.
+        res_memo: dict = {}
+
+        def try_admit(t: float, r: ServeRequest) -> bool:
+            """One admission attempt at instant `t`; commits on success."""
+            nonlocal concurrent
+            snapshot = presolved[keys[r.request_id]]
+            chosen, replanned, status, reason = planner.attempt(
+                state, r, snapshot, res_net_cache=res_memo)
+            if chosen is None:
+                if reason == "capacity" and self.retry:
+                    retries[r.request_id] = retries.get(r.request_id, 0) + 1
+                    if r not in pending:
+                        pending.append(r)
+                else:
+                    served.append(ServedRequest(
+                        r, False, plan=snapshot.plan, reason=reason,
+                        status=status, n_retries=retries.get(r.request_id, 0)))
+                    timeline.append({"t": t, "event": "reject",
+                                     "request_id": r.request_id,
+                                     "concurrent": concurrent})
+                return False
+            latency = planner.commit_latency_s(state, r, chosen)
+            res_memo.clear()  # the residual state just changed
+            depart = t + r.duration_s if r.duration_s != INF else None
+            rec = ServedRequest(
+                r, True, replanned=replanned, latency_s=latency, plan=chosen,
+                status=status, admit_s=t, depart_s=depart,
+                n_retries=retries.get(r.request_id, 0))
+            served.append(rec)
+            concurrent += 1
+            timeline.append({"t": t, "event": "admit",
+                             "request_id": r.request_id,
+                             "concurrent": concurrent})
+            if depart is not None:
+                heapq.heappush(heap, (depart, _DEPART, next(tick), rec))
+            return True
+
+        while heap:
+            t, prio, _, payload = heapq.heappop(heap)
+            horizon = max(horizon, t)
+            if prio == _DEPART:
+                rec: ServedRequest = payload
+                state.release(profile, rec.request, rec.plan)
+                res_memo.clear()  # the residual state just changed
+                concurrent -= 1
+                timeline.append({"t": t, "event": "depart",
+                                 "request_id": rec.request.request_id,
+                                 "concurrent": concurrent})
+                # drain all departures at this instant, then re-attempt the
+                # queue (in arrival order) against the fully freed residuals
+                more_departs_now = (heap and heap[0][0] == t
+                                    and heap[0][1] == _DEPART)
+                if self.retry and pending and not more_departs_now:
+                    for r in sorted(pending, key=lambda r: (r.arrival_s,
+                                                            r.request_id)):
+                        if try_admit(t, r):
+                            pending.remove(r)
+            else:
+                for r in POLICIES[policy](payload, estimates):
+                    try_admit(t, r)
+
+        # the event stream drained with these still queued: final rejections
+        for r in sorted(pending, key=lambda r: (r.arrival_s, r.request_id)):
+            snapshot = presolved[keys[r.request_id]]
+            served.append(ServedRequest(
+                r, False, plan=snapshot.plan, reason="capacity",
+                status=snapshot.status, n_retries=retries.get(r.request_id, 0)))
+            timeline.append({"t": horizon, "event": "reject",
+                             "request_id": r.request_id,
+                             "concurrent": concurrent})
+        assert state.conservation_ok(profile)
+        return SimOutcome(
+            policy=policy, solver=planner.solver_name, served=served,
+            wall_time_s=time.perf_counter() - t0, n_presolved=len(presolved),
+            retry=self.retry, horizon_s=horizon, timeline=timeline)
+
+
+def replay_verify_sim(net: PhysicalNetwork, profile: ModelProfile,
+                      served: list[ServedRequest]) -> bool:
+    """Re-verify a (possibly reloaded) sim trace from scratch.
+
+    Rebuilds the event stream from the served records (commit at ``admit_s``,
+    release at ``depart_s``; departures before commits at equal timestamps,
+    decision order within ties — the simulator's own ordering) and replays it
+    against a fresh :class:`ResidualState`: every plan is structurally
+    re-checked, every commit must fit the residuals at its instant, and
+    conservation must hold after *every* event.
+    """
+    events: list[tuple[float, int, int, ServedRequest]] = []
+    for seq, s in enumerate(served):
+        if not s.accepted:
+            continue
+        if s.plan is None:
+            return False
+        t = s.admit_s if s.admit_s is not None else s.request.arrival_s
+        events.append((t, _ARRIVE, seq, s))
+        if s.depart_s is not None and s.depart_s != INF:
+            events.append((s.depart_s, _DEPART, seq, s))
+    events.sort(key=lambda e: (e[0], e[1], e[2]))
+    state = ResidualState(net)
+    for _, kind, _, s in events:
+        if kind == _ARRIVE:
+            PlanEvaluator(net, profile, s.request.chain_request()).check(s.plan)
+            if not state.fits(profile, s.request, s.plan):
+                return False
+            state.commit(profile, s.request, s.plan)
+        else:
+            try:
+                state.release(profile, s.request, s.plan)
+            except KeyError:  # departure of a never-committed chain
+                return False
+        if not state.conservation_ok(profile):
+            return False
+    return True

@@ -11,7 +11,7 @@ comparison and Pareto report.
 
 CLI:  ``PYTHONPATH=src python -m repro.sweep --suite nsfnet_paper --quick``
 """
-from .report import comparison_report, format_report, schedule_pairs
+from .report import churn_pairs, comparison_report, format_report, schedule_pairs
 from .runner import ScenarioResult, SweepRunner, run_scenario, verify_result
 from .spec import (SUITE_SCHEMA_VERSION, ScenarioSpec, apply_faults,
                    build_profile, build_topology, candidate_sets)
@@ -20,6 +20,6 @@ from .suites import SUITES
 __all__ = [
     "SUITE_SCHEMA_VERSION", "ScenarioSpec", "ScenarioResult", "SweepRunner",
     "SUITES", "apply_faults", "build_profile", "build_topology",
-    "candidate_sets", "comparison_report", "format_report", "run_scenario",
-    "schedule_pairs", "verify_result",
+    "candidate_sets", "churn_pairs", "comparison_report", "format_report",
+    "run_scenario", "schedule_pairs", "verify_result",
 ]

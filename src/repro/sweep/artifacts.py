@@ -11,14 +11,14 @@ import json
 import time
 from pathlib import Path
 
-from .report import comparison_report, schedule_pairs
+from .report import churn_pairs, comparison_report, schedule_pairs
 from .runner import ScenarioResult
 from .spec import SUITE_SCHEMA_VERSION
 
 CSV_FIELDS = [
     "scenario_id", "suite", "figure", "cell", "topology", "profile", "mode",
     "K", "batch_size", "schedule", "n_microbatches", "solver",
-    "candidate_seed", "feasible", "status", "latency_s",
+    "candidate_seed", "feasible", "status", "error", "latency_s",
     "computation_s", "transmission_s", "propagation_s", "bubble_s",
     # seq-vs-pipe pairing (pipe rows with a feasible seq counterpart only)
     "seq_latency_s", "pipe_speedup",
@@ -26,6 +26,11 @@ CSV_FIELDS = [
     # serve-layer (fleet) columns; empty for single-chain scenarios
     "n_requests", "policy", "arrival", "n_accepted", "acceptance_ratio",
     "latency_p50_s", "latency_p95_s", "latency_p99_s",
+    # event-driven sim columns (docs/sim.md); empty for static scenarios
+    "sim", "hold_model", "duration_s", "retry",
+    "blocking_probability", "peak_concurrent", "n_retried",
+    # static-vs-churn pairing (sim rows with a static counterpart only)
+    "static_acceptance", "churn_uplift",
 ]
 
 
@@ -52,12 +57,14 @@ def write_artifacts(out_dir: str | Path, suite_name: str,
 
     csv_path = out / f"{suite_name}.csv"
     pairs = schedule_pairs(results)
+    cpairs = churn_pairs(results)
     with csv_path.open("w", newline="") as fh:
         w = csv.DictWriter(fh, fieldnames=CSV_FIELDS)
         w.writeheader()
         for r in results:
             s = r.spec
             pair = pairs.get(s.scenario_id())
+            cpair = cpairs.get(s.scenario_id())
             w.writerow({
                 "scenario_id": s.scenario_id(),
                 "suite": s.tags.get("suite", suite_name),
@@ -74,6 +81,7 @@ def write_artifacts(out_dir: str | Path, suite_name: str,
                 "candidate_seed": s.candidate_seed,
                 "feasible": r.feasible,
                 "status": _opt(r.status),
+                "error": _opt(r.error),
                 "latency_s": r.latency_s,
                 "computation_s": r.computation_s,
                 "transmission_s": r.transmission_s,
@@ -92,6 +100,16 @@ def write_artifacts(out_dir: str | Path, suite_name: str,
                 "latency_p50_s": _opt(r.latency_p50_s),
                 "latency_p95_s": _opt(r.latency_p95_s),
                 "latency_p99_s": _opt(r.latency_p99_s),
+                "sim": s.sim if s.n_requests > 1 else "",
+                "hold_model": s.hold_model if s.sim else "",
+                "duration_s": _opt(s.duration_s if s.sim else None),
+                "retry": s.retry if s.sim else "",
+                "blocking_probability": _opt(r.blocking_probability),
+                "peak_concurrent": _opt(r.peak_concurrent),
+                "n_retried": _opt(r.n_retried),
+                "static_acceptance": _opt(
+                    cpair["static_acceptance"] if cpair else None),
+                "churn_uplift": _opt(cpair["uplift"] if cpair else None),
             })
     return {"json": json_path, "csv": csv_path}
 

@@ -64,6 +64,41 @@ def schedule_pairs(results: list[ScenarioResult]) -> dict[str, dict]:
     return pairs
 
 
+def churn_pairs(results: list[ScenarioResult]) -> dict[str, dict]:
+    """Map each *sim* (churn) scenario id to its static counterpart's
+    acceptance, pairing on :meth:`ScenarioSpec.churn_key` — identical fleet,
+    solver, and policy; only the churn knobs differ.  ``uplift`` is
+    ``churn acceptance - static acceptance`` (in ratio points): the headline
+    of the event-driven serving model, >= 0 whenever departures free capacity
+    that the one-shot round holds forever."""
+    static_by_key: dict[str, ScenarioResult] = {}
+    for r in results:
+        if (r.spec.n_requests > 1 and not r.spec.sim and r.error is None
+                and r.acceptance_ratio is not None):
+            static_by_key[r.spec.churn_key()] = r
+    pairs: dict[str, dict] = {}
+    for r in results:
+        if not r.spec.sim or r.error is not None or r.acceptance_ratio is None:
+            continue
+        static = static_by_key.get(r.spec.churn_key())
+        if static is None:
+            continue
+        pairs[r.spec.scenario_id()] = {
+            "cell": r.spec.tags.get("cell", ""),
+            "solver": r.spec.solver,
+            "policy": r.spec.policy,
+            "n_requests": r.spec.n_requests,
+            "static_accepted": static.n_accepted,
+            "churn_accepted": r.n_accepted,
+            "static_acceptance": static.acceptance_ratio,
+            "churn_acceptance": r.acceptance_ratio,
+            "uplift": r.acceptance_ratio - static.acceptance_ratio,
+            "blocking_probability": r.blocking_probability,
+            "peak_concurrent": r.peak_concurrent,
+        }
+    return pairs
+
+
 def _pareto(points: list[tuple[str, float, float]]) -> set[str]:
     front = set()
     for name, lat, wall in points:
@@ -83,9 +118,10 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
 
     per_group = []
     agg: dict[str, dict] = defaultdict(
-        lambda: {"n": 0, "n_feasible": 0, "gap_pct_sum": 0.0, "gap_pct_max": 0.0,
-                 "n_gap": 0, "speedup_sum": 0.0, "n_speedup": 0,
-                 "pareto_count": 0, "accept_sum": 0.0, "n_accept": 0})
+        lambda: {"n": 0, "n_feasible": 0, "n_errors": 0, "gap_pct_sum": 0.0,
+                 "gap_pct_max": 0.0, "n_gap": 0, "speedup_sum": 0.0,
+                 "n_speedup": 0, "pareto_count": 0, "accept_sum": 0.0,
+                 "n_accept": 0})
 
     for key, rs in sorted(groups.items()):
         feas = [r for r in rs if r.feasible]
@@ -109,6 +145,11 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
                          "status": r.status,
                          "wall_time_s": r.wall_time_s,
                          "iterations": r.iterations}
+            if r.error is not None:  # crashed scenario (status="error")
+                row["error"] = r.error
+                a["n_errors"] += 1
+                entry["solvers"][r.spec.solver] = row
+                continue
             if r.acceptance_ratio is not None:  # serve (fleet) scenario
                 # gap/speedup/Pareto compare one plan against the optimum;
                 # a fleet's mean latency averages a *different accepted set*
@@ -120,6 +161,11 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
                 row["latency_p50_s"] = r.latency_p50_s
                 row["latency_p95_s"] = r.latency_p95_s
                 row["latency_p99_s"] = r.latency_p99_s
+                if r.spec.sim:  # event-driven churn scenario (docs/sim.md)
+                    row["sim"] = True
+                    row["blocking_probability"] = r.blocking_probability
+                    row["peak_concurrent"] = r.peak_concurrent
+                    row["n_retried"] = r.n_retried
                 a["accept_sum"] += r.acceptance_ratio
                 a["n_accept"] += 1
                 if r.feasible:
@@ -152,6 +198,7 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
         summary[solver] = {
             "n": a["n"],
             "n_feasible": a["n_feasible"],
+            "n_errors": a["n_errors"],
             "mean_gap_pct": a["gap_pct_sum"] / a["n_gap"] if a["n_gap"] else None,
             "max_gap_pct": a["gap_pct_max"] if a["n_gap"] else None,
             "mean_speedup_vs_ref": (a["speedup_sum"] / a["n_speedup"]
@@ -172,8 +219,20 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
             "max_speedup": max(sp),
             "pairs": pairs,
         }
+    cpairs = churn_pairs(results)
+    churn_cmp = None
+    if cpairs:
+        up = [p["uplift"] for p in cpairs.values()]
+        churn_cmp = {
+            "n_pairs": len(up),
+            "mean_uplift": sum(up) / len(up),
+            "min_uplift": min(up),
+            "max_uplift": max(up),
+            "pairs": cpairs,
+        }
     return {"n_groups": len(per_group), "summary": summary,
-            "schedule_comparison": schedule_cmp, "groups": per_group}
+            "schedule_comparison": schedule_cmp,
+            "churn_comparison": churn_cmp, "groups": per_group}
 
 
 def format_report(report: dict) -> str:
@@ -189,6 +248,10 @@ def format_report(report: dict) -> str:
                else f"{s['mean_acceptance_ratio']:.2f}")
         lines.append(f"{solver:<10} {s['n_feasible']:>4}/{s['n']:<4} {gap:>10} "
                      f"{mgap:>10} {spd:>9} {s['pareto_count']:>7} {acc:>7}")
+    n_err = sum(s.get("n_errors", 0) for s in report["summary"].values())
+    if n_err:
+        lines.append(f"! {n_err} scenario(s) crashed (status=error) — see "
+                     f"per-group rows for messages")
     sc = report.get("schedule_comparison")
     if sc:
         lines.append(
@@ -202,4 +265,17 @@ def format_report(report: dict) -> str:
             sp = by_m[m]
             lines.append(f"  M={m:<4} {len(sp):>3} pairs, "
                          f"mean speedup {sum(sp) / len(sp):.2f}x")
+    cc = report.get("churn_comparison")
+    if cc:
+        lines.append(
+            f"static-vs-churn: {cc['n_pairs']} pairs, acceptance uplift "
+            f"mean {cc['mean_uplift']:+.2f}, min {cc['min_uplift']:+.2f}, "
+            f"max {cc['max_uplift']:+.2f}")
+        for sid, p in sorted(cc["pairs"].items(), key=lambda kv: kv[1]["cell"]):
+            lines.append(
+                f"  {p['cell']:<16} {p['solver']:<8} "
+                f"static {p['static_accepted']}/{p['n_requests']} -> churn "
+                f"{p['churn_accepted']}/{p['n_requests']} "
+                f"(uplift {p['uplift']:+.2f}, peak {p['peak_concurrent']} "
+                f"concurrent)")
     return "\n".join(lines)

@@ -20,7 +20,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
 from dataclasses import asdict, dataclass, field
 from pathlib import Path
 
@@ -43,8 +43,9 @@ class ScenarioResult:
 
     spec: ScenarioSpec
     feasible: bool
-    status: str | None = None  # SolveOutcome status (optimal|feasible|infeasible)
+    status: str | None = None  # SolveOutcome status, or "error" (see `error`)
     solver_stats: dict | None = None  # SolveOutcome.stats (portfolio members, ...)
+    error: str | None = None  # exception repr when the scenario crashed
     latency_s: float | None = None
     computation_s: float | None = None
     transmission_s: float | None = None
@@ -64,6 +65,11 @@ class ScenarioResult:
     latency_p95_s: float | None = None
     latency_p99_s: float | None = None
     served: list | None = None  # per-request admission records
+    # event-driven sim scenarios (spec.sim, docs/sim.md)
+    blocking_probability: float | None = None
+    peak_concurrent: int | None = None
+    n_retried: int | None = None
+    sim: dict | None = None  # SimOutcome.sim_summary(): curves, epochs, ...
 
     def to_dict(self) -> dict:
         d = asdict(self)
@@ -118,16 +124,24 @@ def clear_context() -> None:
 
 
 def _run_serve_scenario(spec: ScenarioSpec, net, profile, cache) -> ScenarioResult:
-    """One fleet admission round (spec.n_requests > 1) through repro.serve."""
-    from repro.serve import ServePlanner
+    """One fleet scenario (spec.n_requests > 1) through repro.serve: a static
+    admission round, or — with ``spec.sim`` — the event-driven `ServeSim`."""
+    from repro.serve import ServePlanner, ServeSim
 
     fleet = spec.build_fleet(net)
-    planner = ServePlanner(net, profile, solver=spec.solver, cache=cache,
-                           solver_kwargs=spec.solver_kwargs)
-    outcome = planner.admit(fleet, policy=spec.policy)
+    if spec.sim:
+        runner = ServeSim(net, profile, solver=spec.solver, cache=cache,
+                          retry=spec.retry, solver_kwargs=spec.solver_kwargs)
+        outcome = runner.run(fleet, policy=spec.policy)
+    else:
+        planner = ServePlanner(net, profile, solver=spec.solver, cache=cache,
+                               solver_kwargs=spec.solver_kwargs)
+        outcome = planner.admit(fleet, policy=spec.policy)
     s = outcome.summary()
-    return ScenarioResult(
+    res = ScenarioResult(
         spec, outcome.n_accepted > 0,
+        status=outcome.status,
+        solver_stats=outcome.solver_stats(),
         latency_s=s["latency_mean_s"],
         wall_time_s=outcome.wall_time_s,
         iterations=outcome.n_replanned,
@@ -138,6 +152,12 @@ def _run_serve_scenario(spec: ScenarioSpec, net, profile, cache) -> ScenarioResu
         latency_p99_s=s["latency_p99_s"],
         served=[sr.to_dict() for sr in outcome.served],
     )
+    if spec.sim:
+        res.blocking_probability = outcome.blocking_probability
+        res.peak_concurrent = outcome.peak_concurrent
+        res.n_retried = outcome.n_retried
+        res.sim = outcome.sim_summary()
+    return res
 
 
 def run_scenario(spec: ScenarioSpec, use_context_cache: bool = True) -> ScenarioResult:
@@ -182,11 +202,15 @@ def verify_result(result: ScenarioResult, atol: float = 1e-9) -> bool:
     Single-chain results re-check the plan and its recorded latency; serve
     results replay the admission records in order and confirm the accepted
     chains never oversubscribe any residual link/node capacity, plus the
-    recorded acceptance bookkeeping.
+    recorded acceptance bookkeeping.  Sim results replay the full event trace
+    (commits at admit times, releases at departures) with conservation
+    re-checked after every event (`repro.serve.replay_verify_sim`).
     """
     spec = result.spec
+    if result.error is not None:
+        return False  # a crashed scenario has nothing verifiable
     if spec.n_requests > 1:
-        from repro.serve import ServedRequest, replay_verify
+        from repro.serve import ServedRequest, replay_verify, replay_verify_sim
 
         served = [ServedRequest.from_dict(d) for d in (result.served or [])]
         if len(served) != spec.n_requests:
@@ -197,6 +221,13 @@ def verify_result(result: ScenarioResult, atol: float = 1e-9) -> bool:
         if abs((n_acc / len(served)) - result.acceptance_ratio) > atol:
             return False
         net, profile = spec.build_network(), spec.build_profile()
+        if spec.sim:
+            n_blocked = sum(1 for s in served
+                            if not s.accepted and s.reason == "capacity")
+            if abs((n_blocked / len(served))
+                   - (result.blocking_probability or 0.0)) > atol:
+                return False
+            return replay_verify_sim(net, profile, served)
         return replay_verify(net, profile, served)
     if not result.feasible:
         return True
@@ -273,7 +304,21 @@ class SweepRunner:
         self._cache_path(result.spec).write_text(json.dumps(result.to_dict()))
 
     # -------------------------------------------------------------------- run
+    @staticmethod
+    def _error_result(spec: ScenarioSpec, exc: BaseException) -> ScenarioResult:
+        """A crashed scenario becomes an infeasible `status="error"` record —
+        the sweep keeps going and the failure stays visible in the artifact."""
+        return ScenarioResult(spec, False, status="error",
+                              error=f"{type(exc).__name__}: {exc}")
+
     def run(self, specs: list[ScenarioSpec]) -> list[ScenarioResult]:
+        """Execute every spec; one scenario crashing never loses the sweep.
+
+        Per-scenario exceptions (worker or in-process) are captured into
+        `status="error"` results; completed results are still stored to the
+        disk cache (errored ones are not, so a transient failure is retried
+        on the next run), and ``last_stats["n_errors"]`` reports the count.
+        """
         t0 = time.perf_counter()
         results: list[ScenarioResult | None] = [None] * len(specs)
         misses: list[int] = []
@@ -286,29 +331,46 @@ class SweepRunner:
             misses.append(idx)
 
         if misses and self.workers >= 2 and len(misses) > 1:
+            # submit() instead of map(): map() re-raises the first worker
+            # exception when iterated, losing every other result of the sweep
             with ProcessPoolExecutor(max_workers=self.workers) as pool:
-                solved = pool.map(
-                    _worker,
-                    [(specs[i].to_dict(), self.use_context_cache) for i in misses],
-                    chunksize=max(1, len(misses) // (4 * self.workers)))
-                for idx, rd in zip(misses, solved):
-                    res = ScenarioResult.from_dict(rd)
-                    res.spec = specs[idx]  # keep identity incl. name/tags
-                    results[idx] = res
+                futures = {
+                    pool.submit(_worker, (specs[i].to_dict(),
+                                          self.use_context_cache)): i
+                    for i in misses}
+                not_done = set(futures)
+                while not_done:
+                    done, not_done = wait(not_done, return_when=FIRST_COMPLETED)
+                    for fut in done:
+                        idx = futures[fut]
+                        try:
+                            res = ScenarioResult.from_dict(fut.result())
+                            res.spec = specs[idx]  # identity incl. name/tags
+                        except Exception as exc:  # noqa: BLE001 — per-item capture
+                            res = self._error_result(specs[idx], exc)
+                        results[idx] = res
         else:
             for idx in misses:
-                results[idx] = run_scenario(
-                    specs[idx], use_context_cache=self.use_context_cache)
+                try:
+                    results[idx] = run_scenario(
+                        specs[idx], use_context_cache=self.use_context_cache)
+                except Exception as exc:  # noqa: BLE001 — per-item capture
+                    results[idx] = self._error_result(specs[idx], exc)
 
         if self.use_disk_cache:
             for idx in misses:
-                self._store(results[idx])
+                if results[idx].error is None:
+                    self._store(results[idx])
 
         out = [r for r in results if r is not None]
+        n_errors = sum(1 for r in out if r.error is not None)
         self.last_stats = {
             "n_scenarios": len(specs),
             "n_cache_hits": len(specs) - len(misses),
-            "n_solved": len(misses),
+            "n_solved": len(misses) - n_errors,
+            "n_errors": n_errors,
+            "errors": {specs[i].scenario_id(): results[i].error
+                       for i in misses if results[i].error is not None},
             "wall_time_s": time.perf_counter() - t0,
         }
         return out

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import math
 from dataclasses import asdict, dataclass, field
 
 from repro.core import (
@@ -31,9 +32,11 @@ from repro.core import (
     tpu_pod_topology,
 )
 from repro.serve.policies import POLICY_NAMES
-from repro.serve.requests import ARRIVALS
+from repro.serve.requests import ARRIVALS, HOLD_MODELS
 
-SUITE_SCHEMA_VERSION = 4  # v4: engine dispatch — solve status + solver stats
+# v5: event-driven serving sim (sim/hold_model/duration_s/retry knobs, churn
+# metrics + error capture in results); v4: engine dispatch (status + stats)
+SUITE_SCHEMA_VERSION = 5
 
 # ------------------------------------------------------------------ topologies
 TOPOLOGIES = {
@@ -133,6 +136,12 @@ class ScenarioSpec:
     n_requests: int = 1
     arrival: str = "batch"  # batch | poisson
     policy: str = "fcfs"  # admission policy (repro.serve.policies)
+    # Event-driven serving sim (repro.serve.sim, docs/sim.md): sim=True runs
+    # the fleet through ServeSim instead of one static admission round.
+    sim: bool = False
+    hold_model: str = "none"  # none | fixed | exp (chain holding times)
+    duration_s: float | None = None  # holding time (fixed) / mean (exp)
+    retry: bool = False  # re-attempt capacity-blocked requests on departures
     name: str = ""  # optional human label; not part of the content hash
     tags: dict = field(default_factory=dict)  # free-form grouping metadata
 
@@ -154,6 +163,24 @@ class ScenarioSpec:
             raise ValueError(f"arrival must be one of {ARRIVALS}")
         if self.policy not in POLICY_NAMES:
             raise ValueError(f"policy must be one of {POLICY_NAMES}")
+        if self.hold_model not in HOLD_MODELS:
+            raise ValueError(f"hold_model must be one of {HOLD_MODELS}")
+        if self.sim and self.n_requests < 2:
+            raise ValueError("sim=True needs a fleet (n_requests > 1)")
+        if self.hold_model != "none":
+            if not self.sim:
+                raise ValueError("hold_model requires sim=True (holding "
+                                 "times only act through ServeSim departures)")
+            if self.duration_s is None or not (
+                    self.duration_s > 0 and math.isfinite(self.duration_s)):
+                raise ValueError(f"hold_model={self.hold_model!r} needs a "
+                                 f"positive finite duration_s, got "
+                                 f"{self.duration_s!r}")
+        elif self.duration_s is not None:
+            raise ValueError("duration_s is only meaningful with "
+                             "hold_model in ('fixed', 'exp')")
+        if self.retry and not self.sim:
+            raise ValueError("retry requires sim=True")
         self.drop_links = [list(p) for p in self.drop_links]
         if self.candidates is not None:
             self.candidates = [list(c) for c in self.candidates]
@@ -198,6 +225,16 @@ class ScenarioSpec:
         which is what the seq-vs-pipe speedup report pairs on."""
         d = self.to_dict()
         for f in ("name", "tags", "schedule", "n_microbatches"):
+            d.pop(f, None)
+        return json.dumps(d, sort_keys=True, separators=(",", ":"))
+
+    def churn_key(self) -> str:
+        """Canonical key of everything *except* the churn knobs — a sim
+        scenario and its static counterpart (identical fleet, solver, and
+        policy) share this key, which is what the report's static-vs-churn
+        acceptance-uplift pairing uses."""
+        d = self.to_dict()
+        for f in ("name", "tags", "sim", "hold_model", "duration_s", "retry"):
             d.pop(f, None)
         return json.dumps(d, sort_keys=True, separators=(",", ":"))
 
@@ -253,4 +290,7 @@ class ScenarioSpec:
             arrival=self.arrival, candidates=self.candidates,
             candidates_per_stage=self.candidates_per_stage,
             model_id=self.profile, schedule=self.schedule,
-            n_microbatches=self.n_microbatches)
+            n_microbatches=self.n_microbatches,
+            hold_model=self.hold_model,
+            hold_time_s=(self.duration_s if self.duration_s is not None
+                         else float("inf")))

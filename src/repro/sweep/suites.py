@@ -218,6 +218,43 @@ def nsfnet_multirequest(quick: bool = False,
     return specs
 
 
+def nsfnet_churn(quick: bool = False,
+                 policies: tuple[str, ...] = ("fcfs",),
+                 schemes: tuple[str, ...] = ("bcd",),
+                 hold_s: float = 4.0) -> list[ScenarioSpec]:
+    """Dynamic admission under churn vs the static snapshot round
+    (docs/sim.md): every cell is one Poisson fleet admitted twice — once as
+    today's one-shot `ServePlanner.admit` (every accepted chain holds its
+    reservation forever) and once through the event-driven `ServeSim` with
+    Exponential(mean `hold_s`) holding times and the retry queue.  Both
+    variants share the *identical* fleet (holding times come from a dedicated
+    seeded stream), pair on ``ScenarioSpec.churn_key()``, and feed the
+    report's ``churn_comparison`` section: on overloaded cells the churn
+    acceptance is strictly higher, because capacity released by departures is
+    re-used — the regime the ROADMAP's "heavy traffic" north star needs."""
+    fleets = [16, 32] if quick else [8, 16, 32, 64]
+    seeds = 1 if quick else 3
+    specs = []
+    for n in fleets:
+        for policy in policies:
+            for solver in schemes:
+                for seed in range(seeds):
+                    base = dict(
+                        topology="nsfnet", topology_kwargs={"source": SOURCE},
+                        profile="resnet101", source=SOURCE, destination=DEST,
+                        batch_size=2, mode=IF, K=3, solver=solver,
+                        candidate_seed=seed, n_requests=n, arrival="poisson",
+                        policy=policy)
+                    tags = {"suite": "nsfnet_churn", "seed": seed,
+                            "cell": f"n{n}_{policy}"}
+                    specs.append(ScenarioSpec(
+                        **base, tags={**tags, "variant": "static"}))
+                    specs.append(ScenarioSpec(
+                        **base, sim=True, hold_model="exp", duration_s=hold_s,
+                        retry=True, tags={**tags, "variant": "churn"}))
+    return specs
+
+
 def random_load_scaling(quick: bool = False,
                         policies: tuple[str, ...] = ("fcfs", "latency-greedy")
                         ) -> list[ScenarioSpec]:
@@ -250,5 +287,6 @@ SUITES = {
     "nsfnet_faults": nsfnet_faults,
     "nsfnet_pipeline": nsfnet_pipeline,
     "nsfnet_multirequest": nsfnet_multirequest,
+    "nsfnet_churn": nsfnet_churn,
     "random_load_scaling": random_load_scaling,
 }

@@ -1,0 +1,279 @@
+"""ServeSim: event-driven dynamic admission (docs/sim.md).
+
+Anchoring invariants: release exactly inverts commit, a simulation with
+infinite holding times reproduces the static admission round bit-for-bit,
+conservation holds at every event of a churn trace, and churn strictly beats
+the static round on overloaded fleets (departures free capacity).
+"""
+import math
+
+import pytest
+
+from repro.core import IF, TR, nsfnet, resnet101_profile
+from repro.serve import (HOLD_MODELS, ResidualState, ServePlanner, ServeSim,
+                        ServedRequest, generate_fleet, replay_verify_sim)
+from repro.sweep import (SUITES, ScenarioSpec, SweepRunner, churn_pairs,
+                        comparison_report, run_scenario, verify_result)
+
+NET = nsfnet()
+PROF = resnet101_profile()
+INF = float("inf")
+
+
+def _fleet(n=12, mode=IF, b=2, seed=0, **kw):
+    return generate_fleet(NET, n, "v4", "v13", b, mode, 3, seed=seed, **kw)
+
+
+def _static_fields(s: ServedRequest):
+    """The static-round fields of a served record (sim adds admit/depart)."""
+    return (s.request, s.accepted, s.replanned, s.latency_s, s.plan, s.reason,
+            s.status)
+
+
+# --------------------------------------------------------- release <-> commit
+def test_release_exactly_inverts_commit():
+    fleet = _fleet(6)
+    outcome = ServePlanner(NET, PROF).admit(fleet)
+    accepted = [s for s in outcome.served if s.accepted]
+    assert len(accepted) >= 2
+    state = ResidualState(NET)
+    for s in accepted:
+        state.commit(PROF, s.request, s.plan)
+    assert state.conservation_ok(PROF)
+    for s in accepted:
+        state.release(PROF, s.request, s.plan)
+    # a fully drained state is exactly empty — no float residue survives
+    assert not state.committed
+    assert not dict(state.used_link_fw) and not dict(state.used_link_bw)
+    assert not dict(state.used_mem) and not dict(state.used_disk)
+    assert state.conservation_ok(PROF)
+
+
+def test_release_interleaved_keeps_conservation():
+    fleet = _fleet(8)
+    outcome = ServePlanner(NET, PROF).admit(fleet)
+    accepted = [s for s in outcome.served if s.accepted]
+    state = ResidualState(NET)
+    for s in accepted:
+        state.commit(PROF, s.request, s.plan)
+    # release a middle chain (not LIFO) — conservation must re-derive cleanly
+    victim = accepted[len(accepted) // 2]
+    state.release(PROF, victim.request, victim.plan)
+    assert state.conservation_ok(PROF)
+    assert all(req != victim.request for req, _ in state.committed)
+
+
+def test_release_of_uncommitted_chain_raises():
+    fleet = _fleet(2)
+    outcome = ServePlanner(NET, PROF).admit(fleet)
+    s = next(r for r in outcome.served if r.accepted)
+    state = ResidualState(NET)
+    with pytest.raises(KeyError):
+        state.release(PROF, s.request, s.plan)
+    state.commit(PROF, s.request, s.plan)
+    state.release(PROF, s.request, s.plan)
+    with pytest.raises(KeyError):  # double release is a caller bug
+        state.release(PROF, s.request, s.plan)
+
+
+# -------------------------------------------- static equivalence (inf holds)
+@pytest.mark.parametrize("policy", ["fcfs", "latency-greedy", "batch-desc"])
+def test_sim_with_infinite_holds_matches_static_round(policy):
+    """duration_s = inf means no departures: the event loop must reproduce
+    today's ServePlanner.admit bit-for-bit (plans, latencies, order)."""
+    fleet = _fleet(16)
+    static = ServePlanner(NET, PROF).admit(fleet, policy=policy)
+    sim = ServeSim(NET, PROF).run(fleet, policy=policy)
+    assert [_static_fields(s) for s in sim.served] == \
+           [_static_fields(s) for s in static.served]
+    assert sim.n_presolved == static.n_presolved
+    assert sim.status == static.status
+    # no chain ever departs and nothing is retried
+    assert sim.n_departed == 0 and sim.n_retried == 0
+    assert all(s.depart_s is None for s in sim.served)
+    assert replay_verify_sim(NET, PROF, sim.served)
+
+
+def test_sim_poisson_fcfs_with_infinite_holds_matches_static():
+    fleet = _fleet(12, arrival="poisson", seed=3)
+    static = ServePlanner(NET, PROF).admit(fleet, policy="fcfs")
+    sim = ServeSim(NET, PROF).run(fleet, policy="fcfs")
+    assert [_static_fields(s) for s in sim.served] == \
+           [_static_fields(s) for s in static.served]
+    # admitted at their arrival instants
+    for s in sim.served:
+        if s.accepted:
+            assert s.admit_s == s.request.arrival_s
+
+
+# ------------------------------------------------------------- churn dynamics
+def _churn_fleet(n=32, seed=0):
+    return _fleet(n, seed=seed, arrival="poisson", hold_model="exp",
+                  hold_time_s=4.0)
+
+
+def test_churn_accepts_strictly_more_than_static_when_overloaded():
+    fleet = _churn_fleet()
+    static = ServePlanner(NET, PROF).admit(fleet)
+    sim = ServeSim(NET, PROF, retry=True).run(fleet)
+    assert static.n_accepted < len(fleet)  # the static round is overloaded
+    assert sim.n_accepted > static.n_accepted
+    assert sim.n_departed > 0
+    assert replay_verify_sim(NET, PROF, sim.served)
+
+
+def test_churn_trace_conserves_at_every_event():
+    """Replay the trace event by event: every commit fits the residuals at
+    its instant and conservation re-derives after each arrival/departure."""
+    sim = ServeSim(NET, PROF, retry=True).run(_churn_fleet())
+    assert replay_verify_sim(NET, PROF, sim.served)
+    # tampering with one accepted chain's departure must break the replay
+    # (its demand would be released while still accounted as committed)
+    tampered = [ServedRequest.from_dict(s.to_dict()) for s in sim.served]
+    victim = next(s for s in tampered if s.accepted and s.depart_s is not None)
+    victim.depart_s = victim.admit_s - 1.0  # departs before it was admitted
+    assert not replay_verify_sim(NET, PROF, tampered)
+
+
+def test_retry_queue_admits_blocked_requests_on_departures():
+    fleet = _churn_fleet()
+    no_retry = ServeSim(NET, PROF, retry=False).run(fleet)
+    retry = ServeSim(NET, PROF, retry=True).run(fleet)
+    assert retry.n_accepted >= no_retry.n_accepted
+    assert retry.n_retried > 0
+    for s in retry.served:
+        if s.accepted and s.n_retries > 0:
+            assert s.admit_s > s.request.arrival_s  # waited in the queue
+    assert retry.blocking_probability <= no_retry.blocking_probability
+
+
+def test_sim_metrics_are_consistent():
+    sim = ServeSim(NET, PROF, retry=True).run(_churn_fleet())
+    curve = sim.concurrent_curve()
+    assert all(n >= 0 for _, n in curve)
+    assert max(n for _, n in curve) == sim.peak_concurrent
+    assert [t for t, _ in curve] == sorted(t for t, _ in curve)
+    acc = sim.acceptance_curve()
+    assert all(0.0 <= a <= 1.0 for _, a in acc)
+    assert acc[-1][1] == pytest.approx(sim.acceptance_ratio)
+    assert 0.0 <= sim.blocking_probability <= 1.0
+    epochs = sim.epoch_percentiles(n_epochs=4)
+    assert len(epochs) == 4
+    assert sum(e["n"] for e in epochs) == sim.n_accepted
+    for e in epochs:
+        if e["n"]:
+            assert e["p50"] <= e["p95"] <= e["p99"]
+    s = sim.sim_summary()
+    assert s["peak_concurrent"] == sim.peak_concurrent
+    assert s["n_departed"] == sim.n_departed
+
+
+def test_served_request_sim_fields_round_trip():
+    sim = ServeSim(NET, PROF, retry=True).run(_churn_fleet(n=8))
+    for s in sim.served:
+        back = ServedRequest.from_dict(s.to_dict())
+        assert back == s
+        assert back.request.duration_s == s.request.duration_s
+
+
+# ------------------------------------------------------------ fleet holding
+def test_generate_fleet_hold_models():
+    base = _fleet(8, arrival="poisson")
+    assert all(r.duration_s == INF for r in base)
+    fixed = _fleet(8, arrival="poisson", hold_model="fixed", hold_time_s=2.5)
+    assert all(r.duration_s == 2.5 for r in fixed)
+    exp = _fleet(8, arrival="poisson", hold_model="exp", hold_time_s=2.5)
+    assert all(0 < r.duration_s < INF for r in exp)
+    assert len({r.duration_s for r in exp}) > 1  # actually random
+    # dedicated hold stream: arrivals/candidates identical across hold models
+    for a, b, c in zip(base, fixed, exp):
+        assert a.arrival_s == b.arrival_s == c.arrival_s
+        assert a.candidates == b.candidates == c.candidates
+    # seeded determinism
+    again = _fleet(8, arrival="poisson", hold_model="exp", hold_time_s=2.5)
+    assert [r.duration_s for r in again] == [r.duration_s for r in exp]
+    with pytest.raises(ValueError):
+        _fleet(4, hold_model="gamma")
+    with pytest.raises(ValueError):
+        _fleet(4, hold_model="fixed")  # needs a finite hold_time_s
+
+
+# ------------------------------------------------------------ sweep integration
+def test_sim_scenario_spec_knobs_and_validation():
+    spec = ScenarioSpec(
+        topology="nsfnet", topology_kwargs={"source": "v4"},
+        profile="resnet101", source="v4", destination="v13",
+        batch_size=2, mode=IF, K=3, solver="bcd",
+        n_requests=8, arrival="poisson", policy="fcfs",
+        sim=True, hold_model="exp", duration_s=4.0, retry=True)
+    clone = ScenarioSpec.from_dict(spec.to_dict())
+    assert clone == spec and clone.spec_hash() == spec.spec_hash()
+    # churn knobs are solve-relevant: they must change the content hash
+    for patch in ({"sim": False, "hold_model": "none", "duration_s": None,
+                   "retry": False},
+                  {"duration_s": 8.0}, {"retry": False},
+                  {"hold_model": "fixed"}):
+        other = ScenarioSpec.from_dict({**spec.to_dict(), **patch})
+        assert other.spec_hash() != spec.spec_hash()
+        # ... but all pair on churn_key with the static counterpart
+        assert other.churn_key() == spec.churn_key()
+    base = dict(topology="nsfnet", profile="resnet101", source="v4",
+                destination="v13", batch_size=2, mode=IF, K=3, n_requests=8)
+    with pytest.raises(ValueError):  # holds without the sim
+        ScenarioSpec(**base, hold_model="exp", duration_s=4.0)
+    with pytest.raises(ValueError):  # retry without the sim
+        ScenarioSpec(**base, retry=True)
+    with pytest.raises(ValueError):  # exp holds need a duration
+        ScenarioSpec(**base, sim=True, hold_model="exp")
+    with pytest.raises(ValueError):  # duration without a hold model
+        ScenarioSpec(**base, sim=True, duration_s=4.0)
+    with pytest.raises(ValueError):  # sim needs a fleet
+        ScenarioSpec(**{**base, "n_requests": 1}, sim=True)
+
+
+def test_sim_scenario_runs_and_verifies():
+    spec = ScenarioSpec(
+        topology="nsfnet", topology_kwargs={"source": "v4"},
+        profile="resnet101", source="v4", destination="v13",
+        batch_size=2, mode=IF, K=3, solver="bcd",
+        n_requests=12, arrival="poisson", policy="fcfs",
+        sim=True, hold_model="exp", duration_s=4.0, retry=True,
+        tags={"suite": "test"})
+    result = run_scenario(spec, use_context_cache=False)
+    assert result.feasible
+    assert result.status in ("optimal", "feasible")
+    assert result.solver_stats["n_presolved"] >= 1
+    assert result.blocking_probability is not None
+    assert result.peak_concurrent >= 1
+    assert result.sim["horizon_s"] > 0
+    assert len(result.served) == 12
+    assert verify_result(result)
+    # corrupting the trace must fail verification
+    bad = run_scenario(spec, use_context_cache=False)
+    for d in bad.served:
+        if d["accepted"] and d.get("depart_s") is not None:
+            d["depart_s"] = d["admit_s"] - 1.0
+            break
+    assert not verify_result(bad)
+
+
+def test_nsfnet_churn_suite_shows_uplift():
+    """The acceptance criterion: under finite churn the suite admits strictly
+    more than the static round on at least one overloaded cell, with the
+    event traces replay-verified."""
+    specs = SUITES["nsfnet_churn"](quick=True)
+    assert any(s.sim for s in specs) and any(not s.sim for s in specs)
+    results = SweepRunner(workers=0).run(specs)
+    assert len(results) == len(specs)
+    assert all(r.error is None for r in results)
+    pairs = churn_pairs(results)
+    assert pairs  # every sim cell found its static counterpart
+    overloaded = [p for p in pairs.values() if p["static_acceptance"] < 1.0]
+    assert overloaded
+    assert any(p["churn_acceptance"] > p["static_acceptance"]
+               for p in overloaded)
+    report = comparison_report(results)
+    assert report["churn_comparison"]["n_pairs"] == len(pairs)
+    assert report["churn_comparison"]["mean_uplift"] > 0
+    for r in results:
+        assert verify_result(r)

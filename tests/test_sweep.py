@@ -175,6 +175,66 @@ def test_disk_cache_serves_second_run(tmp_path):
         assert w.segments == c.segments
 
 
+# ---------------------------------------------------------- error robustness
+def _crashing_spec():
+    """K=9 on 14-node NSFNET: candidate_sets needs 14 intermediates but only
+    12 exist — raises at fleet/candidate construction inside the scenario."""
+    return ScenarioSpec(topology="nsfnet", topology_kwargs={"source": "v4"},
+                        profile="resnet101", source="v4", destination="v13",
+                        batch_size=2, mode=IF, K=9, solver="bcd",
+                        tags={"suite": "test"})
+
+
+@pytest.mark.parametrize("workers", [0, 2])
+def test_one_crashing_scenario_does_not_lose_the_sweep(workers, tmp_path):
+    specs = [_spec(solver="exact"), _crashing_spec(), _spec(solver="bcd")]
+    runner = SweepRunner(cache_dir=tmp_path / "cache", workers=workers)
+    results = runner.run(specs)
+    assert len(results) == 3
+    assert results[0].feasible and results[2].feasible
+    bad = results[1]
+    assert not bad.feasible and bad.status == "error"
+    assert "candidate_sets" in bad.error and "K=9" in bad.error
+    assert runner.last_stats["n_errors"] == 1
+    assert runner.last_stats["n_solved"] == 2
+    assert bad.spec.scenario_id() in runner.last_stats["errors"]
+    assert not verify_result(bad)  # a crashed scenario is never verifiable
+    # completed results were stored; the errored one is retried next run
+    warm = runner.run(specs)
+    assert runner.last_stats["n_cache_hits"] == 2
+    assert runner.last_stats["n_errors"] == 1
+    assert warm[0].from_cache and warm[2].from_cache
+
+
+def test_error_results_survive_artifacts_and_report(tmp_path):
+    results = SweepRunner(workers=0).run([_spec(solver="bcd"), _crashing_spec()])
+    report = comparison_report(results)
+    assert report["summary"]["bcd"]["n_errors"] == 1
+    paths = write_artifacts(tmp_path, "unit_err", results)
+    _, reloaded = load_artifact(paths["json"])
+    assert reloaded[1].status == "error" and "candidate_sets" in reloaded[1].error
+    assert "error" in paths["csv"].read_text().splitlines()[0]
+
+
+# ------------------------------------------------- serve status threading
+def test_serve_scenario_populates_status_and_solver_stats():
+    """Regression: serve rows used to report status=None despite the engine
+    dispatch — the planner's solve outcomes must reach the artifact."""
+    spec = ScenarioSpec(topology="nsfnet", topology_kwargs={"source": "v4"},
+                        profile="resnet101", source="v4", destination="v13",
+                        batch_size=2, mode=IF, K=3, solver="exact",
+                        n_requests=4, policy="fcfs", tags={"suite": "test"})
+    result = run_scenario(spec, use_context_cache=False)
+    assert result.feasible
+    assert result.status == "optimal"  # every accepted solve was the exact DP
+    stats = result.solver_stats
+    assert stats["n_presolved"] >= 1
+    assert sum(stats["statuses"].values()) == 4
+    bcd = run_scenario(ScenarioSpec.from_dict(
+        {**spec.to_dict(), "solver": "bcd"}), use_context_cache=False)
+    assert bcd.status == "feasible"  # heuristic solves are never optimal
+
+
 # ----------------------------------------------------------------- suite smoke
 def test_nsfnet_paper_quick_suite_smoke():
     specs = SUITES["nsfnet_paper"](quick=True, modes=(IF,), schemes=("exact", "bcd"))

@@ -1,0 +1,73 @@
+"""Topology regressions: ring-edge normalization in `random_network` and the
+actionable `candidate_sets` capacity error."""
+import random
+
+import pytest
+
+from repro.core import candidate_sets, nsfnet, random_network
+from repro.core.topology import NSFNET_EDGES_KM
+
+
+# ------------------------------------------------- random_network ring dedup
+def test_random_network_never_duplicates_the_wraparound_edge():
+    """p=1.0 draws every (i, j) pair, including (0, n-1) — which the ring
+    used to store as (n-1, 0), double-adding the undirected link {v1, vN}
+    and shifting the seeded delay stream.  Post-fix the edge set is exactly
+    the distinct sorted pairs and each delay comes from one draw."""
+    n = 6
+    net = random_network(n, p=1.0, seed=3)
+    assert len(net.links) == n * (n - 1)  # every pair, both directions, once
+    # reconstruct the expected seeded stream: n*(n-1)/2 membership draws,
+    # then one delay draw per *distinct* undirected edge in sorted order
+    rng = random.Random(3)
+    for _ in range(n * (n - 1) // 2):
+        rng.random()
+    for i in range(n):
+        for j in range(i + 1, n):
+            d = rng.uniform(1.23e-3, 14.2e-3)
+            assert net.links[(f"v{i + 1}", f"v{j + 1}")].delay_fw == d
+            assert net.links[(f"v{j + 1}", f"v{i + 1}")].delay_fw == d
+
+
+@pytest.mark.parametrize("n,p,seed", [(2, 0.0, 0), (5, 0.3, 1), (12, 0.2, 7),
+                                      (30, 0.2, 7)])
+def test_random_network_edges_are_symmetric_deterministic_and_connected(n, p, seed):
+    net = random_network(n, p=p, seed=seed)
+    undirected = {frozenset(e) for e in net.links}
+    assert len(net.links) == 2 * len(undirected)  # every link paired, no dup
+    for (u, v), spec in net.links.items():
+        assert net.links[(v, u)].delay_fw == spec.delay_fw
+    # the connectivity ring survives normalization (incl. the wraparound)
+    for i in range(1, n + 1):
+        j = i % n + 1
+        assert (f"v{i}", f"v{j}") in net.links
+    again = random_network(n, p=p, seed=seed)
+    assert {k: s.delay_fw for k, s in net.links.items()} == \
+           {k: s.delay_fw for k, s in again.links.items()}
+
+
+def test_nsfnet_edge_count_unchanged():
+    net = nsfnet()
+    assert len(net.links) == 2 * len(NSFNET_EDGES_KM)
+
+
+# ------------------------------------------------ candidate_sets capacity error
+def test_candidate_sets_raises_actionable_error_when_oversubscribed():
+    nodes = [f"v{i}" for i in range(1, 15)]  # NSFNET: 12 intermediates
+    with pytest.raises(ValueError) as ei:
+        candidate_sets(9, 0, nodes, "v4", "v13", per_stage=2)
+    msg = str(ei.value)
+    assert "K=9" in msg and "per_stage=2" in msg and "12" in msg
+    with pytest.raises(ValueError):
+        candidate_sets(4, 0, ["v1", "v2", "v3"], "v1", "v3", per_stage=2)
+
+
+def test_candidate_sets_boundary_still_works():
+    nodes = [f"v{i}" for i in range(1, 15)]
+    # exactly exhausts the 12 intermediates: per_stage * (K-2) == 12
+    cands = candidate_sets(8, 0, nodes, "v4", "v13", per_stage=2)
+    assert len(cands) == 8
+    mids = [n for stage in cands[1:-1] for n in stage]
+    assert len(mids) == 12 and len(set(mids)) == 12
+    assert cands[0] == ["v4"] and cands[-1] == ["v13"]
+    assert candidate_sets(2, 0, nodes, "v4", "v13") == [["v4"], ["v13"]]
