@@ -1,10 +1,12 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify verify-fast test test-fast sweep-quick bench-quick docs-check clean
+.PHONY: verify verify-fast test test-fast sweep-quick bench-quick \
+	bench-solver bench-solver-smoke docs-check clean
 
-## verify: tier-1 tests + one quick end-to-end sweep (the CI gate)
-verify: test sweep-quick
+## verify: tier-1 tests + one quick end-to-end sweep + the batched-solver
+## throughput smoke gate (the CI gate)
+verify: test sweep-quick bench-solver-smoke
 
 ## verify-fast: the core dev loop (<40s) — deselects the multi-minute
 ## jax-stack tests (pytest -m slow: shard_map subprocess runs, kernel
@@ -29,6 +31,17 @@ sweep-quick:
 ## bench-quick: all paper-figure benchmarks at the reduced CI tier
 bench-quick:
 	$(PYTHON) -m benchmarks.run --quick
+
+## bench-solver: full solver-core throughput grid -> BENCH_solver.json
+## (NumPy loop vs batched JAX vs Pallas, batch sizes 1..1024; exits non-zero
+## unless warm batched JAX is >= 10x the NumPy loop at batch >= 256)
+bench-solver:
+	$(PYTHON) -m benchmarks.solver_throughput
+
+## bench-solver-smoke: batch=8 gate only — warm batched JAX must beat the
+## scalar NumPy loop
+bench-solver-smoke:
+	$(PYTHON) -m benchmarks.solver_throughput --smoke
 
 ## docs-check: CLIs import/--help cleanly and docs/*.md links are unbroken
 docs-check:

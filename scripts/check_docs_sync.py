@@ -11,6 +11,15 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 LINK_RE = re.compile(r"\(((?:docs/)?[\w.-]+\.md)(?:#[\w-]+)?\)")
+SRC_RE = re.compile(r"`(src/repro/[\w/.]+\.py)`")
+
+# Modules the docs must both mention and that must exist on disk — the
+# subsystem map in docs/architecture.md and the solver guide go stale
+# silently otherwise.
+REQUIRED_DOCUMENTED = (
+    "src/repro/core/jax_solvers.py",
+    "src/repro/kernels/minplus.py",
+)
 
 
 def doc_links(path: Path) -> set[Path]:
@@ -49,6 +58,22 @@ def main() -> int:
         if doc not in readme_reachable:
             errors.append(f"orphaned doc (not reachable from README.md): "
                           f"{doc.relative_to(ROOT)}")
+
+    # source modules referenced by full path in docs must exist on disk ...
+    all_docs = [readme] + sorted((ROOT / "docs").glob("*.md"))
+    docs_text = "\n".join(d.read_text() for d in all_docs)
+    for mod in sorted(set(SRC_RE.findall(docs_text))):
+        if not (ROOT / mod).exists():
+            errors.append(f"doc references missing source module: {mod}")
+    # ... and the mapped subsystems must stay documented (by basename)
+    for mod in REQUIRED_DOCUMENTED:
+        path = ROOT / mod
+        if not path.exists():
+            errors.append(f"required module missing from tree: {mod}")
+        if path.name not in docs_text:
+            errors.append(f"module {mod} is not mentioned anywhere in "
+                          f"README.md or docs/ (update docs/architecture.md "
+                          f"and docs/solvers.md)")
 
     if errors:
         print("\n".join(errors), file=sys.stderr)

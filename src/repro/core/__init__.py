@@ -58,6 +58,7 @@ from .engine import (
     portfolio_solve,
     register_solver,
     solve,
+    solve_batch,
     solver_capabilities,
     solver_names,
     solver_supports,
@@ -95,7 +96,8 @@ __all__ = [
     "Plan", "PlanEvaluator", "ServiceChainRequest",
     "OPTIMAL", "FEASIBLE", "INFEASIBLE", "STATUSES",
     "ProblemInstance", "SolveOutcome", "SolveResult", "SolverInfo",
-    "register_solver", "unregister_solver", "solve", "solver_names",
+    "register_solver", "unregister_solver", "solve", "solve_batch",
+    "solver_names",
     "solver_supports", "ensure_solver_supported", "get_solver",
     "solver_capabilities", "portfolio_solve", "PORTFOLIO_DEFAULT_MEMBERS",
     "LinkSpec", "NodeSpec", "PhysicalNetwork", "SOLVERS",

@@ -51,6 +51,10 @@ class SolverInfo:
     optimal: bool  # provably latency-minimal when feasible
     meta: bool  # composes other registered solvers (e.g. portfolio)
     description: str
+    # Optional vectorized entry: batch_fn(problems, *, cache=None, **kw) ->
+    # list[SolveResult] aligned with `problems`.  solve_batch() dispatches to
+    # it when present and falls back to a scalar solve() loop when not.
+    batch_fn: Callable[..., list] | None = None
 
     def capabilities(self) -> dict:
         """Plain-data capability record (the --list-solvers CLI prints it)."""
@@ -59,6 +63,7 @@ class SolverInfo:
             "schedules": list(self.schedules),
             "optimal": self.optimal,
             "meta": self.meta,
+            "batched": self.batch_fn is not None,
             "description": self.description,
         }
 
@@ -73,13 +78,16 @@ def register_solver(
     optimal: bool = False,
     meta: bool = False,
     description: str = "",
+    batch: Callable[..., list] | None = None,
 ) -> Callable:
     """Decorator registering a solver function under ``name``.
 
     ``schedules`` declares which execution schedules the solver's objective
     models — a solver without ``PIPE`` is rejected (by ``solver_supports``)
     for requests whose effective pipeline depth exceeds 1, instead of each
-    caller re-implementing that rule.
+    caller re-implementing that rule.  ``batch`` optionally supplies a
+    vectorized ``batch(problems, *, cache=None, **kw) -> list[SolveResult]``
+    entry that :func:`solve_batch` dispatches through.
     """
     schedules = tuple(schedules)
     unknown = [s for s in schedules if s not in SCHEDULES]
@@ -92,7 +100,8 @@ def register_solver(
             raise ValueError(f"solver {name!r} is already registered")
         doc = description or next(
             iter((fn.__doc__ or "").strip().splitlines()), "")
-        _REGISTRY[name] = SolverInfo(name, fn, schedules, optimal, meta, doc)
+        _REGISTRY[name] = SolverInfo(name, fn, schedules, optimal, meta, doc,
+                                     batch)
         return fn
 
     return deco
@@ -103,11 +112,24 @@ def unregister_solver(name: str) -> None:
     _REGISTRY.pop(name, None)
 
 
+_BUILTINS_LOADED = False
+
+
 def _ensure_builtins() -> None:
     # Importing the solver modules runs their @register_solver decorators.
     # Lazy so `repro.core.engine` works standalone and import cycles can't
-    # form (the solver modules import this module at their top level).
+    # form (the solver modules import this module at their top level).  The
+    # flag keeps the hot registry lookups (every solve/solve_batch item) from
+    # re-walking the import machinery.
+    global _BUILTINS_LOADED
+    if _BUILTINS_LOADED:
+        return
     from . import baselines, bcd, exact, ilp  # noqa: F401
+    try:
+        from . import jax_solvers  # noqa: F401  (optional: needs jax)
+    except ImportError:
+        pass
+    _BUILTINS_LOADED = True
 
 
 def solver_names() -> tuple[str, ...]:
@@ -204,6 +226,64 @@ def solve(
     if isinstance(res, SolveOutcome):
         return res  # meta-solvers build their outcome (status, stats) inline
     return SolveOutcome.from_result(res, optimal=info.optimal)
+
+
+def solve_batch(
+    problems: list[ProblemInstance],
+    solver: str = "bcd",
+    *,
+    cache: EvalCache | None = None,
+    dedup: bool = True,
+    **solver_kwargs,
+) -> list[SolveOutcome]:
+    """Solve many problems with one named solver; returns aligned outcomes.
+
+    Capability validation is per problem (same uniform errors as
+    :func:`solve`, raised before any solving starts).  With ``dedup`` (the
+    default), content-hash-equal instances are solved once and the outcome
+    object is shared across their slots — sound because solvers are
+    deterministic functions of the instance content.  Solvers registered with
+    a ``batch`` function get the whole unique set in one call (the batched
+    JAX solvers pad it into dense arrays); others fall back to a scalar
+    :func:`solve` loop, so every registered solver is batch-dispatchable.
+    """
+    # Support depends only on (schedule, effective M) — validate each distinct
+    # signature once, raising at the *first* offending problem like the naive
+    # per-problem loop would.
+    seen_sigs: set[tuple[str, int]] = set()
+    for p in problems:
+        sig = (p.request.schedule, p.request.microbatches())
+        if sig not in seen_sigs:
+            seen_sigs.add(sig)
+            ensure_solver_supported(solver, p)
+    info = get_solver(solver)
+    if not problems:
+        return []
+
+    if dedup:
+        order: dict[str, int] = {}  # content hash -> index into `unique`
+        unique: list[ProblemInstance] = []
+        for p in problems:
+            h = p.content_hash()
+            if h not in order:
+                order[h] = len(unique)
+                unique.append(p)
+        slot = [order[p.content_hash()] for p in problems]
+    else:
+        unique = list(problems)
+        slot = list(range(len(problems)))
+
+    if info.batch_fn is not None:
+        results = info.batch_fn(unique, cache=cache, **solver_kwargs)
+        outcomes = [r if isinstance(r, SolveOutcome)
+                    else SolveOutcome.from_result(r, optimal=info.optimal)
+                    for r in results]
+    else:
+        outcomes = [solve(p, solver, cache=cache, **solver_kwargs)
+                    for p in unique]
+    if not dedup:
+        return outcomes
+    return [outcomes[i] for i in slot]
 
 
 # ------------------------------------------------------------ legacy shims

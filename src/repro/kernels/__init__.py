@@ -8,9 +8,10 @@ mode on CPU; Mosaic lowering on real TPUs.
 """
 from . import ops, ref
 from .flash_attention import flash_attention
+from .minplus import minplus_matmul
 from .moe_gmm import expert_matmul
 from .rglru import rglru_scan
 from .ssd import ssd_intra_chunk
 
-__all__ = ["ops", "ref", "flash_attention", "expert_matmul", "rglru_scan",
-           "ssd_intra_chunk"]
+__all__ = ["ops", "ref", "flash_attention", "expert_matmul", "minplus_matmul",
+           "rglru_scan", "ssd_intra_chunk"]

@@ -54,6 +54,14 @@ def reference_rglru_scan(a, b):
     return h
 
 
+def reference_minplus(a, b):
+    """Tropical matmul oracle, same semantics as kernels.minplus_matmul:
+    val[..., m, n] = min_k a[..., m, k] + b[..., k, n]; idx = first argmin k
+    (int32; 0 for all-+inf columns, the jnp.argmin convention)."""
+    cand = a[..., :, :, None] + b[..., None, :, :]  # (..., M, K, N)
+    return cand.min(axis=-2), cand.argmin(axis=-2).astype(jnp.int32)
+
+
 def reference_ssd_intra_chunk(x, Bm, Cm, dt, A):
     """Chunk-local SSD terms; mirrors models.layers._ssd_chunked's intra part.
 

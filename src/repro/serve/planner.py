@@ -28,7 +28,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import (EvalCache, ModelProfile, PhysicalNetwork, Plan,
-                        PlanEvaluator, SolveOutcome, get_solver, solve)
+                        PlanEvaluator, SolveOutcome, get_solver, solve,
+                        solve_batch)
 
 from .policies import POLICIES
 from .requests import ServeRequest
@@ -218,14 +219,21 @@ class ServePlanner:
         deduped by ProblemInstance content hash (the engine-wide instance
         identity).  Returns (outcome by key, key by request id, solo-latency
         estimate by request id — the policies' ordering input)."""
-        presolved: dict[str, SolveOutcome] = {}
         keys: dict[int, str] = {}
-        estimates: dict[int, float] = {}
+        seen: set[str] = set()
+        order: list[str] = []  # first-seen key order (scalar-loop parity)
+        problems: list = []
         for r in requests:
             key = keys[r.request_id] = r.solve_key(self.net, self.profile)
-            if key not in presolved:
-                presolved[key] = self._solve(self.net, r, self.cache)
-            estimates[r.request_id] = presolved[key].latency_s
+            if key not in seen:
+                seen.add(key)
+                order.append(key)
+                problems.append(r.problem(self.net, self.profile))
+        outcomes = solve_batch(problems, self.solver_name, cache=self.cache,
+                               **self.solver_kwargs)
+        presolved = dict(zip(order, outcomes))
+        estimates = {r.request_id: presolved[keys[r.request_id]].latency_s
+                     for r in requests}
         return presolved, keys, estimates
 
     def attempt(self, state: ResidualState, r: ServeRequest,

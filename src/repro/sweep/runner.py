@@ -25,7 +25,7 @@ from dataclasses import asdict, dataclass, field
 from pathlib import Path
 
 from repro.core import (EvalCache, LatencyBreakdown, Plan, PlanEvaluator,
-                        SolveOutcome, solve)
+                        SolveOutcome, get_solver, solve, solve_batch)
 
 from .spec import ScenarioSpec
 
@@ -160,16 +160,33 @@ def _run_serve_scenario(spec: ScenarioSpec, net, profile, cache) -> ScenarioResu
     return res
 
 
-def run_scenario(spec: ScenarioSpec, use_context_cache: bool = True) -> ScenarioResult:
-    """Solve one grid point in-process."""
+def _presolve_key(spec: ScenarioSpec, problem) -> tuple:
+    """Identity under which a batch-presolved outcome may substitute for a
+    scalar solve: same solver, same solver kwargs, same instance content."""
+    return (spec.solver, json.dumps(spec.solver_kwargs, sort_keys=True,
+                                    default=str), problem.content_hash())
+
+
+def run_scenario(spec: ScenarioSpec, use_context_cache: bool = True,
+                 presolved: dict | None = None) -> ScenarioResult:
+    """Solve one grid point in-process.
+
+    ``presolved`` optionally maps :func:`_presolve_key` identities to
+    :class:`SolveOutcome`s computed up front by a batched solver dispatch
+    (see :meth:`SweepRunner._batch_presolve`); hits skip the scalar solve.
+    """
     if use_context_cache:
         net, profile, cache = _context(spec)
     else:
         net, profile, cache = spec.build_network(), spec.build_profile(), None
     if spec.n_requests > 1:
         return _run_serve_scenario(spec, net, profile, cache)
-    res: SolveOutcome = solve(spec.problem(net, profile), spec.solver,
-                              cache=cache, **spec.solver_kwargs)
+    problem = spec.problem(net, profile)
+    res: SolveOutcome | None = None
+    if presolved:
+        res = presolved.get(_presolve_key(spec, problem))
+    if res is None:
+        res = solve(problem, spec.solver, cache=cache, **spec.solver_kwargs)
     if not res.feasible:
         return ScenarioResult(spec, False, status=res.status,
                               solver_stats=res.stats or None,
@@ -304,6 +321,44 @@ class SweepRunner:
         self._cache_path(result.spec).write_text(json.dumps(result.to_dict()))
 
     # -------------------------------------------------------------------- run
+    def _batch_presolve(self, specs: list[ScenarioSpec]) -> dict:
+        """Vectorized pre-pass for the serial path: group single-chain
+        scenarios by (solver, solver_kwargs), and for solvers registered
+        with a batch entry (``capabilities()["batched"]``) dispatch each
+        group through :func:`repro.core.solve_batch` once.  Returns the
+        ``presolved`` map :func:`run_scenario` consumes; scenarios not in it
+        (serve fleets, scalar-only solvers, unknown solvers) fall through to
+        the ordinary scalar solve.  Disabled with ``use_context_cache=False``
+        — that mode exists to measure honest per-scenario wall time, which a
+        shared warm batch would flatter."""
+        if not self.use_context_cache:
+            return {}
+        groups: dict[tuple, list[ScenarioSpec]] = {}
+        for spec in specs:
+            if spec.n_requests > 1:
+                continue
+            try:
+                info = get_solver(spec.solver)
+            except ValueError:
+                continue  # unknown solver: let run_scenario raise per-item
+            if info.batch_fn is None:
+                continue
+            kw = json.dumps(spec.solver_kwargs, sort_keys=True, default=str)
+            groups.setdefault((spec.solver, kw), []).append(spec)
+        presolved: dict = {}
+        for (solver, _), members in groups.items():
+            if len(members) < 2:
+                continue  # nothing to amortize
+            try:
+                problems = [s.problem(*_context(s)[:2]) for s in members]
+                outs = solve_batch(problems, solver,
+                                   **members[0].solver_kwargs)
+            except Exception:  # noqa: BLE001 — presolve is best-effort
+                continue  # scalar path will solve (and surface errors) per item
+            for s, p, o in zip(members, problems, outs):
+                presolved[_presolve_key(s, p)] = o
+        return presolved
+
     @staticmethod
     def _error_result(spec: ScenarioSpec, exc: BaseException) -> ScenarioResult:
         """A crashed scenario becomes an infeasible `status="error"` record —
@@ -350,10 +405,12 @@ class SweepRunner:
                             res = self._error_result(specs[idx], exc)
                         results[idx] = res
         else:
+            presolved = self._batch_presolve([specs[i] for i in misses])
             for idx in misses:
                 try:
                     results[idx] = run_scenario(
-                        specs[idx], use_context_cache=self.use_context_cache)
+                        specs[idx], use_context_cache=self.use_context_cache,
+                        presolved=presolved)
                 except Exception as exc:  # noqa: BLE001 — per-item capture
                     results[idx] = self._error_result(specs[idx], exc)
 

@@ -1,0 +1,287 @@
+"""Parity/property lockdown for the batched JAX solver core.
+
+``dfts_jax`` / ``bcd_jax`` are accelerated twins of the scalar NumPy solvers:
+the contract is *bit parity* — identical plans and latency breakdowns on the
+full quick tiers (policy fallback: latency within 1e-6 relative with provably
+tied-cost plans; see docs/solvers.md).  Beyond parity, this module locks down
+the batch engine semantics: padded ragged batches equal the singleton loop,
+content-hash-equal instances produce bit-identical batched results, memo keys
+never collide across (schedule, M) variants, and the registry degrades
+gracefully when the JAX solvers are absent.
+"""
+from __future__ import annotations
+
+import pytest
+
+import repro.core.engine as engine_mod
+from repro.core import (
+    IF,
+    PIPE,
+    TR,
+    EvalCache,
+    ProblemInstance,
+    ServiceChainRequest,
+    SolveOutcome,
+    bcd_solve,
+    nsfnet,
+    portfolio_solve,
+    resnet101_profile,
+    solve,
+    solve_batch,
+    solver_names,
+)
+from repro.sweep.spec import candidate_sets
+from repro.sweep.suites import DEST, NSFNET_NODES, SOURCE
+
+NET = nsfnet(source=SOURCE)
+PROF = resnet101_profile()
+
+REL_TOL = 1e-6  # documented fallback tolerance (docs/solvers.md)
+
+
+def _problem(mode=IF, K=3, b=2, seed=0, schedule="seq", M=1,
+             per_stage=2) -> ProblemInstance:
+    cands = candidate_sets(K, seed, NSFNET_NODES, SOURCE, DEST,
+                           per_stage=per_stage)
+    req = ServiceChainRequest(
+        model_id=PROF.model_id, source=SOURCE, destination=DEST,
+        batch_size=b, mode=mode, schedule=schedule, n_microbatches=M)
+    return ProblemInstance(NET, PROF, req, K, tuple(tuple(c) for c in cands))
+
+
+def _assert_parity(ref: SolveOutcome, jax: SolveOutcome) -> None:
+    assert ref.feasible == jax.feasible
+    if not ref.feasible:
+        return
+    rel = abs(jax.latency_s - ref.latency_s) / max(abs(ref.latency_s), 1e-30)
+    assert rel <= REL_TOL, (ref.latency_s, jax.latency_s)
+    if jax.plan != ref.plan:
+        # different plans are acceptable only when provably tied in cost
+        assert jax.latency_s == ref.latency_s
+    else:
+        # same plan must mean the same breakdown, bit for bit
+        assert jax.latency == ref.latency
+
+
+# --------------------------------------------------- quick-tier parity grids
+def _paper_cells():
+    ks = [2, 3, 5]
+    bs = [2, 128]
+    cells = []
+    for mode in (IF, TR):
+        for K in ks:
+            for b in bs:
+                for seed in range(3):
+                    cells.append((mode, K, b, seed))
+    return cells
+
+
+_FAST_CELLS = [c for c in _paper_cells() if c[1] == 3]
+_SLOW_CELLS = [c for c in _paper_cells() if c[1] != 3]
+
+
+def _check_seq_cell(mode, K, b, seed):
+    p = _problem(mode=mode, K=K, b=b, seed=seed)
+    _assert_parity(solve(p, "dfts_np", cache=EvalCache()),
+                   solve(p, "dfts_jax", cache=EvalCache()))
+    _assert_parity(solve(p, "bcd", cache=EvalCache()),
+                   solve(p, "bcd_jax", cache=EvalCache()))
+
+
+@pytest.mark.parametrize("mode,K,b,seed", _FAST_CELLS)
+def test_parity_nsfnet_paper_quick(mode, K, b, seed):
+    _check_seq_cell(mode, K, b, seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode,K,b,seed", _SLOW_CELLS)
+def test_parity_nsfnet_paper_quick_full(mode, K, b, seed):
+    _check_seq_cell(mode, K, b, seed)
+
+
+def _pipeline_cells():
+    cells = []
+    for K in (3,):
+        for mode, b in ((IF, 32), (TR, 128)):
+            for M in (1, 4, 16):
+                cells.append((mode, K, b, M))
+    return cells
+
+
+@pytest.mark.parametrize("mode,K,b,M", _pipeline_cells())
+def test_parity_nsfnet_pipeline_quick(mode, K, b, M):
+    p = _problem(mode=mode, K=K, b=b, seed=0, schedule=PIPE, M=M)
+    _assert_parity(solve(p, "dfts_np", cache=EvalCache()),
+                   solve(p, "dfts_jax", cache=EvalCache()))
+    _assert_parity(solve(p, "bcd", cache=EvalCache()),
+                   solve(p, "bcd_jax", cache=EvalCache()))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode,b", [(IF, 32), (TR, 128)])
+def test_parity_nsfnet_pipeline_k5(mode, b):
+    p = _problem(mode=mode, K=5, b=b, seed=0, schedule=PIPE, M=4)
+    _assert_parity(solve(p, "dfts_np", cache=EvalCache()),
+                   solve(p, "dfts_jax", cache=EvalCache()))
+
+
+# --------------------------------------------- padded batch == singleton loop
+def _ragged_batch() -> list[ProblemInstance]:
+    """Mixed K / candidate-set-size / mode / schedule — maximally ragged, so
+    the padding (both the S candidate axis and the pow2 batch axis) is
+    exercised in one call."""
+    return [
+        _problem(mode=IF, K=2, b=2, seed=0),
+        _problem(mode=TR, K=3, b=128, seed=1),
+        _problem(mode=IF, K=5, b=8, seed=2, per_stage=4),
+        _problem(mode=TR, K=3, b=32, seed=3, per_stage=6),
+        _problem(mode=IF, K=3, b=32, seed=4, schedule=PIPE, M=4),
+        _problem(mode=IF, K=2, b=2, seed=5),
+        _problem(mode=TR, K=5, b=128, seed=6, per_stage=4),
+    ]
+
+
+@pytest.mark.parametrize("solver", ["dfts_jax", "bcd_jax"])
+def test_ragged_batch_equals_singleton_loop(solver):
+    problems = _ragged_batch()
+    batched = solve_batch(problems, solver, dedup=False)
+    singles = [solve(p, solver) for p in problems]
+    assert len(batched) == len(problems)
+    for got, want in zip(batched, singles):
+        assert got.feasible == want.feasible
+        assert got.plan == want.plan
+        assert got.latency == want.latency  # bit-identical breakdowns
+        assert got.status == want.status
+
+
+def test_batch_dedup_shares_outcomes():
+    a, b = _problem(seed=0), _problem(seed=0)  # equal content, new objects
+    assert a.content_hash() == b.content_hash()
+    out = solve_batch([a, b, _problem(seed=1)], "dfts_jax")
+    assert out[0] is out[1]  # dedup shares the outcome object
+    assert out[0].plan == solve(a, "dfts_jax").plan
+
+
+def test_batch_empty_and_singleton():
+    assert solve_batch([], "dfts_jax") == []
+    p = _problem(seed=0)
+    outs = solve_batch([p], "dfts_jax")
+    assert len(outs) == 1 and outs[0].feasible
+    assert outs[0].plan == solve(p, "dfts_jax").plan
+
+
+# ------------------------------------------------- content-hash / memo keys
+def test_hash_stable_results_across_padding():
+    """Content-hash-equal instances must produce bit-identical results no
+    matter where they land in a padded batch (regression: padding position
+    must not leak into decode)."""
+    base = _problem(mode=TR, K=3, b=128, seed=1)
+    twin = _problem(mode=TR, K=3, b=128, seed=1)
+    fillers = [_problem(mode=IF, K=2, b=2, seed=s) for s in range(4)]
+    o1 = solve_batch([base] + fillers, "dfts_jax", dedup=False)[0]
+    o2 = solve_batch(fillers + [twin], "dfts_jax", dedup=False)[-1]
+    assert base.content_hash() == twin.content_hash()
+    assert o1.plan == o2.plan
+    assert o1.latency == o2.latency
+
+
+def test_memo_keys_distinguish_schedule_and_microbatches():
+    """seq / pipe-M4 / pipe-M16 variants of one cell are distinct instances:
+    hashes differ and interleaved solving never cross-contaminates (a key
+    collision across (schedule, M) would surface here as a wrong latency)."""
+    import repro.core.jax_solvers as jx
+
+    variants = [
+        _problem(mode=IF, K=3, b=32, seed=0),
+        _problem(mode=IF, K=3, b=32, seed=0, schedule=PIPE, M=4),
+        _problem(mode=IF, K=3, b=32, seed=0, schedule=PIPE, M=16),
+    ]
+    hashes = [p.content_hash() for p in variants]
+    assert len(set(hashes)) == len(hashes)
+
+    # cold reference: each variant solved with every module memo cleared
+    cold = []
+    for p in variants:
+        for memo in (jx._ENCODE_MEMO, jx._GRID_MEMO, jx._SHIP_MEMO,
+                     jx._PATH_MEMO, jx._PATHCOST_MEMO, jx._NODEVEC_MEMO,
+                     jx._PROFILE_MEMO, jx._PLAN_MEMO):
+            memo.clear()
+        cold.append(solve(p, "dfts_jax"))
+    # warm: all three interleaved twice over shared memos
+    for _ in range(2):
+        for p, ref in zip(variants, cold):
+            got = solve(p, "dfts_jax")
+            assert got.plan == ref.plan
+            assert got.latency == ref.latency
+
+
+# ----------------------------------------------------- engine / registry
+def test_registered_with_capabilities():
+    names = solver_names()
+    for required in ("dfts_np", "dfts_jax", "bcd_jax"):
+        assert required in names
+    for name in ("dfts_jax", "bcd_jax"):
+        caps = engine_mod.get_solver(name).capabilities()
+        assert caps["batched"] is True
+        assert set(caps["schedules"]) == {"seq", "pipe"}
+    assert engine_mod.get_solver("dfts_np").capabilities()["batched"] is False
+
+
+def test_solve_batch_capability_error_uniform():
+    """solve_batch raises the same actionable message as scalar solve, before
+    any solving starts."""
+    good = _problem(mode=IF, K=3, b=32, seed=0)
+    pipe = _problem(mode=IF, K=3, b=32, seed=0, schedule=PIPE, M=4)
+    with pytest.raises(ValueError) as scalar_err:
+        solve(pipe, "ilp")
+    with pytest.raises(ValueError) as batch_err:
+        solve_batch([good, pipe], "ilp")
+    assert str(batch_err.value) == str(scalar_err.value)
+    assert "ilp" in str(batch_err.value)
+    with pytest.raises(ValueError):
+        solve_batch([good], "no-such-solver")
+
+
+def test_scalar_solvers_batch_via_fallback_loop():
+    """Every registered solver is batch-dispatchable: no batch_fn means a
+    scalar solve loop with identical outcomes."""
+    problems = [_problem(seed=0), _problem(seed=1)]
+    outs = solve_batch(problems, "bcd", dedup=False)
+    for p, got in zip(problems, outs):
+        want = solve(p, "bcd")
+        assert got.plan == want.plan
+        assert got.latency == want.latency
+
+
+def test_portfolio_survives_missing_jax_solvers():
+    """With the JAX solvers deregistered (e.g. jax absent at import), the
+    portfolio and the batch entry point still work on scalar members."""
+    saved = {}
+    for name in ("dfts_jax", "bcd_jax", "dfts_np"):
+        saved[name] = engine_mod._REGISTRY.pop(name)
+    try:
+        assert "dfts_jax" not in solver_names()
+        p = _problem(seed=0)
+        out = portfolio_solve(*p.solver_args())
+        assert out.feasible and out.stats["winner"] in solver_names()
+        outs = solve_batch([p], "bcd")
+        assert outs[0].feasible
+        with pytest.raises(ValueError):
+            solve_batch([p], "dfts_jax")
+    finally:
+        engine_mod._REGISTRY.update(saved)
+    assert "dfts_jax" in solver_names()
+
+
+def test_deprecated_shims_bit_for_bit():
+    """The warn-once legacy shims keep returning bit-identical plans now that
+    the registry carries batch functions too."""
+    import warnings
+
+    p = _problem(mode=TR, K=3, b=128, seed=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res = bcd_solve(*p.solver_args())
+    out = solve(p, "bcd")
+    assert res.plan == out.plan
+    assert res.latency == out.latency

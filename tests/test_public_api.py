@@ -15,7 +15,8 @@ CORE_ALL_SNAPSHOT = (
     # engine: problem / solver / outcome
     "OPTIMAL", "FEASIBLE", "INFEASIBLE", "STATUSES",
     "ProblemInstance", "SolveOutcome", "SolveResult", "SolverInfo",
-    "register_solver", "unregister_solver", "solve", "solver_names",
+    "register_solver", "unregister_solver", "solve", "solve_batch",
+    "solver_names",
     "solver_supports", "ensure_solver_supported", "get_solver",
     "solver_capabilities", "portfolio_solve", "PORTFOLIO_DEFAULT_MEMBERS",
     # network + legacy solver surface
