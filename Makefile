@@ -2,11 +2,12 @@ PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: verify verify-fast test test-fast sweep-quick bench-quick \
-	bench-solver bench-solver-smoke docs-check clean
+	bench-solver bench-solver-smoke bench-serve bench-serve-smoke \
+	docs-check clean
 
 ## verify: tier-1 tests + one quick end-to-end sweep + the batched-solver
-## throughput smoke gate (the CI gate)
-verify: test sweep-quick bench-solver-smoke
+## and serving-gateway throughput smoke gates (the CI gate)
+verify: test sweep-quick bench-solver-smoke bench-serve-smoke
 
 ## verify-fast: the core dev loop (<40s) — deselects the multi-minute
 ## jax-stack tests (pytest -m slow: shard_map subprocess runs, kernel
@@ -43,10 +44,22 @@ bench-solver:
 bench-solver-smoke:
 	$(PYTHON) -m benchmarks.solver_throughput --smoke
 
+## bench-serve: full gateway throughput grid (batch-window sweep, cold vs
+## warm admissions/s, tick percentiles) -> BENCH_serve.json
+bench-serve:
+	$(PYTHON) -m benchmarks.serve_throughput
+
+## bench-serve-smoke: one small streaming cell — warm sustained gateway
+## throughput must clear the admissions/s floor (docs/gateway.md)
+bench-serve-smoke:
+	$(PYTHON) -m benchmarks.serve_throughput --smoke
+
 ## docs-check: CLIs import/--help cleanly and docs/*.md links are unbroken
 docs-check:
 	$(PYTHON) -m repro.sweep --help > /dev/null
 	$(PYTHON) -m repro.serve --help > /dev/null
+	$(PYTHON) -m repro.serve --gateway --n-requests 4 --arrival poisson \
+		--batch-window-s 0.5 > /dev/null
 	$(PYTHON) scripts/check_docs_sync.py
 
 clean:

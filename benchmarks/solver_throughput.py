@@ -103,7 +103,12 @@ def _time_engine(engine: str, batch: list[ProblemInstance],
         kw = {"use_pallas": True} if engine == "pallas" else {}
 
         def run():
-            solve_batch(batch, "dfts_jax", cache=cache, dedup=False, **kw)
+            # min_batch=1 pins the batched kernel even at batch=1 — this
+            # benchmark *measures* the dispatch crossover the engine's
+            # default threshold (SOLVE_BATCH_MIN_BATCH) is derived from,
+            # so it must never be rerouted by it.
+            solve_batch(batch, "dfts_jax", cache=cache, dedup=False,
+                        min_batch=1, **kw)
 
     t0 = time.perf_counter()
     run()

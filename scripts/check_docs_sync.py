@@ -19,6 +19,7 @@ SRC_RE = re.compile(r"`(src/repro/[\w/.]+\.py)`")
 REQUIRED_DOCUMENTED = (
     "src/repro/core/jax_solvers.py",
     "src/repro/kernels/minplus.py",
+    "src/repro/serve/gateway.py",
 )
 
 

@@ -206,6 +206,16 @@ def ensure_solver_supported(
     return get_solver(name)
 
 
+# Unique-instance count below which solve_batch prefers the scalar loop even
+# when the solver registers a batch function.  Batched dispatch has fixed
+# per-call overhead (encode/pad/jit re-entry) that only amortizes across
+# enough instances: BENCH_solver.json puts warm batched dfts_jax at ~0.2x the
+# scalar path for a single instance and ~1.2x by batch 8, so the measured
+# crossover sits in between.  Override per call with ``min_batch=`` (1 forces
+# batched dispatch, as before).
+SOLVE_BATCH_MIN_BATCH = 4
+
+
 # ---------------------------------------------------------------- entry point
 def solve(
     problem: ProblemInstance,
@@ -234,6 +244,7 @@ def solve_batch(
     *,
     cache: EvalCache | None = None,
     dedup: bool = True,
+    min_batch: int | None = None,
     **solver_kwargs,
 ) -> list[SolveOutcome]:
     """Solve many problems with one named solver; returns aligned outcomes.
@@ -246,6 +257,13 @@ def solve_batch(
     a ``batch`` function get the whole unique set in one call (the batched
     JAX solvers pad it into dense arrays); others fall back to a scalar
     :func:`solve` loop, so every registered solver is batch-dispatchable.
+
+    ``min_batch`` (default :data:`SOLVE_BATCH_MIN_BATCH`, the measured
+    batched-vs-scalar crossover) routes unique sets smaller than the
+    threshold to the scalar loop even when a batch function is registered —
+    tiny sets pay more in batch-dispatch overhead than they save.  Outcomes
+    are identical either side of the threshold (the batched solvers are
+    bit-for-bit twins of their scalar paths); only wall time changes.
     """
     # Support depends only on (schedule, effective M) — validate each distinct
     # signature once, raising at the *first* offending problem like the naive
@@ -273,7 +291,8 @@ def solve_batch(
         unique = list(problems)
         slot = list(range(len(problems)))
 
-    if info.batch_fn is not None:
+    threshold = SOLVE_BATCH_MIN_BATCH if min_batch is None else min_batch
+    if info.batch_fn is not None and len(unique) >= threshold:
         results = info.batch_fn(unique, cache=cache, **solver_kwargs)
         outcomes = [r if isinstance(r, SolveOutcome)
                     else SolveOutcome.from_result(r, optimal=info.optimal)

@@ -110,22 +110,41 @@ class EvalCache:
     `fits` additionally depends on node capacities, so a cache must never be
     shared across *networks* (e.g. residual-capacity views); `comp` depends
     only on the node compute models and may be (see :meth:`fork_fits`).
+
+    ``hits`` / ``misses`` count lookups across both tables — the serve layer
+    surfaces them per admission round (``ServeOutcome.solver_stats()``);
+    forked caches count their own traffic even though the comp table is
+    shared.
     """
 
-    __slots__ = ("comp", "fits")
+    __slots__ = ("comp", "fits", "hits", "misses")
 
     def __init__(self) -> None:
         # keys: (node, lo, hi, batch_size, mode, schedule, n_microbatches)
         self.comp: dict[tuple, float] = {}
         self.fits: dict[tuple, bool] = {}
+        self.hits = 0
+        self.misses = 0
 
     def fork_fits(self) -> "EvalCache":
         """A cache sharing this one's compute table but with fresh fit tables —
         for residual-capacity views of the same network (same compute models,
-        different node capacities)."""
+        different node capacities).  Counters start fresh: the fork counts its
+        own traffic."""
         out = EvalCache()
         out.comp = self.comp
         return out
+
+    @property
+    def hit_rate(self) -> float | None:
+        total = self.hits + self.misses
+        return self.hits / total if total else None
+
+    def stats(self) -> dict:
+        """Counter snapshot for observability blocks (JSON-able)."""
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hit_rate,
+                "n_comp": len(self.comp), "n_fits": len(self.fits)}
 
 
 class PlanEvaluator:
@@ -147,7 +166,9 @@ class PlanEvaluator:
         key = (node, lo, hi, *self._ck)
         hit = self.cache.fits.get(key)
         if hit is not None:
+            self.cache.hits += 1
             return hit
+        self.cache.misses += 1
         spec = self.net.nodes[node]
         ok = self.profile.seg_disk_bytes(lo, hi) <= spec.disk_capacity
         if ok:
@@ -175,7 +196,9 @@ class PlanEvaluator:
         key = (node, lo, hi, *self._ck)
         hit = self.cache.comp.get(key)
         if hit is not None:
+            self.cache.hits += 1
             return hit
+        self.cache.misses += 1
         cm = self.net.nodes[node].compute
         b = self.request.batch_size
         total = 0.0

@@ -18,7 +18,11 @@ CLI:  ``PYTHONPATH=src python -m repro.serve --n-requests 16 --policy fcfs``
 """
 from repro.core import SOLVERS  # legacy re-export; use repro.core.solve(...)
 
-from .planner import ServedRequest, ServeOutcome, ServePlanner, replay_verify
+from .admission import AdmissionCore, ServedRequest
+from .gateway import (GatewayConfig, GatewayOutcome, GatewayStats,
+                      ServeGateway)
+from .plancache import PlanCache
+from .planner import ServeOutcome, ServePlanner, replay_verify
 from .policies import POLICIES, POLICY_NAMES
 from .requests import (ARRIVALS, BATCH_SPREAD, HOLD_MODELS, ServeRequest,
                        generate_fleet)
@@ -27,8 +31,9 @@ from .sim import ServeSim, SimOutcome, replay_verify_sim
 
 __all__ = [
     "ARRIVALS", "BATCH_SPREAD", "HOLD_MODELS", "POLICIES", "POLICY_NAMES",
-    "SOLVERS", "PlanDemand", "ResidualState", "ServeOutcome", "ServePlanner",
-    "ServeRequest", "ServeSim", "ServedRequest", "SimOutcome",
-    "effective_rate_rps", "generate_fleet", "plan_demand", "replay_verify",
-    "replay_verify_sim",
+    "SOLVERS", "AdmissionCore", "GatewayConfig", "GatewayOutcome",
+    "GatewayStats", "PlanCache", "PlanDemand", "ResidualState",
+    "ServeGateway", "ServeOutcome", "ServePlanner", "ServeRequest",
+    "ServeSim", "ServedRequest", "SimOutcome", "effective_rate_rps",
+    "generate_fleet", "plan_demand", "replay_verify", "replay_verify_sim",
 ]

@@ -4,6 +4,8 @@
     PYTHONPATH=src python -m repro.serve --topology random \
         --topology-kwargs '{"n_nodes": 30, "p": 0.2, "seed": 7}' \
         --source v1 --destination v30 --n-requests 32 --arrival poisson
+    PYTHONPATH=src python -m repro.serve --gateway --arrival poisson \
+        --batch-window-s 0.5 --hold-model exp --duration-s 4 --retry
 
 Prints a per-request admission table plus the round summary (acceptance
 ratio, latency percentiles); ``--json`` additionally writes the summary and
@@ -17,6 +19,7 @@ import sys
 
 from repro.core import solver_names, solver_supports
 
+from .gateway import GatewayConfig, ServeGateway
 from .planner import ServePlanner
 from .policies import POLICY_NAMES
 from .requests import ARRIVALS, HOLD_MODELS, generate_fleet
@@ -60,18 +63,38 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--duration-s", type=float, default=None,
                     help="holding time (fixed) or mean holding time (exp)")
     ap.add_argument("--retry", action="store_true",
-                    help="--sim: queue capacity-blocked requests and retry "
-                         "them when a departure frees room")
+                    help="--sim/--gateway: queue capacity-blocked requests "
+                         "and retry them when a departure frees room")
+    ap.add_argument("--gateway", action="store_true",
+                    help="stream the fleet through the long-running "
+                         "ServeGateway (batched ticks, warm plan cache, "
+                         "docs/gateway.md) instead of one static round")
+    ap.add_argument("--batch-window-s", type=float, default=0.0,
+                    help="--gateway: group arrivals within this window into "
+                         "one presolved admission tick")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="--gateway: bounded admission queue; submissions "
+                         "beyond it are rejected with reason queue-full")
+    ap.add_argument("--slo-latency-s", type=float, default=None,
+                    help="--gateway: reject chains whose planned latency "
+                         "exceeds this SLO (before committing capacity)")
     ap.add_argument("--json", default=None, help="write summary + records here")
     args = ap.parse_args(argv)
+    if args.sim and args.gateway:
+        ap.error("--sim and --gateway are mutually exclusive")
     if args.hold_model != "none" and args.duration_s is None:
         ap.error(f"--hold-model {args.hold_model} requires --duration-s")
     if args.duration_s is not None and args.hold_model == "none":
         ap.error("--duration-s requires --hold-model fixed|exp "
                  "(it would be silently ignored otherwise)")
     if ((args.hold_model != "none" or args.duration_s is not None
-         or args.retry) and not args.sim):
-        ap.error("--hold-model/--duration-s/--retry only apply with --sim")
+         or args.retry) and not (args.sim or args.gateway)):
+        ap.error("--hold-model/--duration-s/--retry only apply with "
+                 "--sim or --gateway")
+    if ((args.batch_window_s != 0.0 or args.max_queue is not None
+         or args.slo_latency_s is not None) and not args.gateway):
+        ap.error("--batch-window-s/--max-queue/--slo-latency-s only apply "
+                 "with --gateway")
     # No batch_size: the fleet's batch spread means some requests may pipeline
     # deeper than the base batch clamps, so check the unclamped depth.
     ok, reason = solver_supports(args.solver, schedule=args.schedule,
@@ -98,19 +121,29 @@ def main(argv: list[str] | None = None) -> int:
         sim = ServeSim(net, profile, solver=args.solver,
                        replan=not args.no_replan, retry=args.retry)
         outcome = sim.run(fleet, policy=args.policy)
+    elif args.gateway:
+        gw = ServeGateway(
+            net, profile, solver=args.solver, replan=not args.no_replan,
+            policy=args.policy,
+            config=GatewayConfig(batch_window_s=args.batch_window_s,
+                                 max_queue=args.max_queue,
+                                 slo_latency_s=args.slo_latency_s,
+                                 retry=args.retry))
+        outcome = gw.run_stream(fleet)
     else:
         planner = ServePlanner(net, profile, solver=args.solver,
                                replan=not args.no_replan)
         outcome = planner.admit(fleet, policy=args.policy)
 
-    extra = f" {'admit':>8} {'depart':>8} {'retry':>5}" if args.sim else ""
+    dynamic = args.sim or args.gateway
+    extra = f" {'admit':>8} {'depart':>8} {'retry':>5}" if dynamic else ""
     print(f"{'id':>4} {'arrive':>8} {'b':>4} {'mode':>4} "
           f"{'admitted':>8} {'replan':>6} {'latency_ms':>11}{extra}  placement")
     for s in outcome.served:
         r = s.request
         lat = "-" if s.latency_s is None else f"{s.latency_s * 1e3:.2f}"
         place = "->".join(s.plan.placement) if (s.accepted and s.plan) else s.reason
-        if args.sim:
+        if dynamic:
             adm = "-" if s.admit_s is None else f"{s.admit_s:.3f}"
             dep = "-" if s.depart_s is None else f"{s.depart_s:.3f}"
             extra = f" {adm:>8} {dep:>8} {s.n_retries:>5}"
@@ -126,12 +159,27 @@ def main(argv: list[str] | None = None) -> int:
           f"p50/p95/p99 {pct['latency_p50_s']}/{pct['latency_p95_s']}/"
           f"{pct['latency_p99_s']}, {summary['wall_time_s']:.2f}s",
           file=sys.stderr)
-    if args.sim:
-        print(f"# sim: horizon {outcome.horizon_s:.3f}s, "
+    if dynamic:
+        kind = "gateway" if args.gateway else "sim"
+        print(f"# {kind}: horizon {outcome.horizon_s:.3f}s, "
               f"{outcome.n_departed} departed, "
               f"peak {outcome.peak_concurrent} concurrent, "
               f"{outcome.n_retried} admitted via retry, "
               f"blocking {outcome.blocking_probability:.2f}", file=sys.stderr)
+    if args.gateway:
+        gs = outcome.gateway_stats
+        pc = gs.get("plan_cache", {})
+        pct = gs["tick_wall_pct"]
+        print(f"# gateway: {gs['n_ticks']} ticks "
+              f"(window {args.batch_window_s}s), "
+              f"tick p50/p95 {(pct['p50'] or 0.0) * 1e3:.2f}/"
+              f"{(pct['p95'] or 0.0) * 1e3:.2f}ms, "
+              f"max queue depth {gs['max_queue_depth']}, "
+              f"{outcome.n_queue_rejected} queue-full, "
+              f"{outcome.n_slo_rejected} slo-rejected, "
+              f"plan-cache hit rate {pc.get('hit_rate', 0.0):.2f}, "
+              f"{gs['admissions_per_s'] or 0.0:.1f} admissions/s",
+              file=sys.stderr)
     if args.json:
         doc = {"summary": summary,
                "served": [s.to_dict() for s in outcome.served]}

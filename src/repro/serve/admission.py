@@ -1,0 +1,231 @@
+"""AdmissionCore — the one admission engine under every serve driver.
+
+Layer 1 of the serve stack (docs/gateway.md): the snapshot-fits →
+residual-replan → commit/release/retry state machine that used to live twice
+(inline in :meth:`ServePlanner.admit` and again in :meth:`ServeSim.run`) is
+one object here, and the three drivers are thin loops over it:
+
+* the **static round** (`ServePlanner.admit`) feeds the whole policy-ordered
+  fleet through :meth:`AdmissionCore.try_admit` with no timestamps;
+* the **simulator** (`ServeSim.run`) walks its event heap, calling
+  :meth:`try_admit` on arrivals, :meth:`release` on departures, and
+  :meth:`drain_pending` after the departures of an instant have all drained;
+* the **gateway** (`ServeGateway`) does the same per tick, with the extra
+  control-plane knobs (bounded queues, SLO rejection) layered on top.
+
+The core owns the mutable admission state — the :class:`ResidualState`, the
+decision records, the retry queue and per-request retry counts, the event
+timeline, and the residual-network memo shared across consecutive *failed*
+attempts (any commit/release invalidates it).  All policy decisions (ordering,
+when to tick, when to give up) stay in the drivers; all capacity decisions
+live here, so the three drivers cannot drift apart.
+
+``slo_latency_s`` is the gateway's SLO gate: when set, an otherwise-admissible
+plan whose contended latency exceeds the budget is rejected *before* commit
+(reason ``"slo"``) — the fabric is never touched, so the residual memo stays
+valid.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import Plan, SolveOutcome
+
+from .requests import ServeRequest
+from .residual import ResidualState
+
+INF = float("inf")
+
+
+@dataclass
+class ServedRequest:
+    """Admission outcome of one request (in admission/decision order)."""
+
+    request: ServeRequest
+    accepted: bool
+    replanned: bool = False
+    latency_s: float | None = None
+    plan: Plan | None = None
+    reason: str = ""  # "" | "no-plan" | "capacity" | "slo" | "queue-full"
+    status: str | None = None  # SolveOutcome.status of the winning solve
+    # Event-driven fields (ServeSim / ServeGateway); None for static rounds.
+    admit_s: float | None = None  # admission timestamp (>= arrival on retry)
+    depart_s: float | None = None  # admit_s + duration_s when finite
+    n_retries: int = 0  # failed capacity attempts before the final decision
+
+    def to_dict(self) -> dict:
+        r = self.request
+        d = {
+            "request_id": r.request_id,
+            "source": r.source,
+            "destination": r.destination,
+            "batch_size": r.batch_size,
+            "mode": r.mode,
+            "K": r.K,
+            "candidates": [list(c) for c in r.candidates],
+            "arrival_s": r.arrival_s,
+            "rate_rps": r.rate_rps,
+            "model_id": r.model_id,
+            "schedule": r.schedule,
+            "n_microbatches": r.n_microbatches,
+            # inf round-trips as null so the artifacts stay strict JSON
+            "duration_s": None if r.duration_s == INF else r.duration_s,
+            "accepted": self.accepted,
+            "replanned": self.replanned,
+            "latency_s": self.latency_s,
+            "reason": self.reason,
+            "status": self.status,
+            "admit_s": self.admit_s,
+            "depart_s": self.depart_s,
+            "n_retries": self.n_retries,
+        }
+        if self.plan is not None:
+            d["segments"] = [list(s) for s in self.plan.segments]
+            d["placement"] = list(self.plan.placement)
+            d["paths"] = [list(p) for p in self.plan.paths]
+            d["tail_path"] = list(self.plan.tail_path)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServedRequest":
+        duration = d.get("duration_s")
+        req = ServeRequest(
+            request_id=d["request_id"], source=d["source"],
+            destination=d["destination"], batch_size=d["batch_size"],
+            mode=d["mode"], K=d["K"],
+            candidates=tuple(tuple(c) for c in d["candidates"]),
+            arrival_s=d["arrival_s"], rate_rps=d["rate_rps"],
+            model_id=d["model_id"], schedule=d.get("schedule", "seq"),
+            n_microbatches=d.get("n_microbatches", 1),
+            duration_s=INF if duration is None else duration)
+        plan = None
+        if "segments" in d:
+            plan = Plan(segments=[tuple(s) for s in d["segments"]],
+                        placement=list(d["placement"]),
+                        paths=[list(p) for p in d["paths"]],
+                        tail_path=list(d["tail_path"]))
+        return cls(req, d["accepted"], d["replanned"], d["latency_s"], plan,
+                   d.get("reason", ""), d.get("status"), d.get("admit_s"),
+                   d.get("depart_s"), d.get("n_retries", 0))
+
+
+class AdmissionCore:
+    """The shared admission state machine (see module docstring).
+
+    ``presolved`` / ``keys`` are the planner's snapshot-solve maps; the
+    gateway grows them incrementally (``presolved.update(...)``) as new
+    shapes stream in.  ``record_events`` turns on the timeline audit log —
+    events carry the timestamp the driver passes to each call, so the static
+    round (no timestamps) leaves the timeline empty.
+    """
+
+    def __init__(self, planner, presolved: dict[str, SolveOutcome],
+                 keys: dict[int, str], *, retry: bool = False,
+                 slo_latency_s: float | None = None,
+                 record_events: bool = False):
+        self.planner = planner
+        self.presolved = presolved
+        self.keys = keys
+        self.retry = retry
+        self.slo_latency_s = slo_latency_s
+        self.record_events = record_events
+
+        self.state = ResidualState(planner.net)
+        self.served: list[ServedRequest] = []
+        self.timeline: list[dict] = []
+        self.pending: list[ServeRequest] = []  # capacity-blocked, awaiting retry
+        self.retries: dict[int, int] = {}
+        self.concurrent = 0
+        # Residual-network memo for planner.attempt, shared across the
+        # *failed* attempts between two state changes (the state is unchanged
+        # between them); any commit or release invalidates it.
+        self.res_memo: dict = {}
+
+    def snapshot_for(self, r: ServeRequest) -> SolveOutcome:
+        return self.presolved[self.keys[r.request_id]]
+
+    def _event(self, event: str, request_id: int, t: float | None) -> None:
+        if self.record_events and t is not None:
+            self.timeline.append({"t": t, "event": event,
+                                  "request_id": request_id,
+                                  "concurrent": self.concurrent})
+
+    def try_admit(self, r: ServeRequest,
+                  t: float | None = None) -> ServedRequest | None:
+        """One admission attempt (at instant `t` when event-driven); commits
+        on success and returns the accepted record — the driver schedules the
+        departure from its ``depart_s``.  Returns None when the request was
+        rejected-and-recorded or parked on the retry queue."""
+        snapshot = self.snapshot_for(r)
+        chosen, replanned, status, reason = self.planner.attempt(
+            self.state, r, snapshot, res_net_cache=self.res_memo)
+        if chosen is not None and self.slo_latency_s is not None:
+            latency = self.planner.planned_latency_s(self.state, r, chosen)
+            if latency > self.slo_latency_s:
+                # nothing was committed: the residual memo stays valid
+                self.served.append(ServedRequest(
+                    r, False, replanned=replanned, latency_s=latency,
+                    plan=chosen, reason="slo", status=status,
+                    n_retries=self.retries.get(r.request_id, 0)))
+                self._event("reject", r.request_id, t)
+                return None
+        if chosen is None:
+            if reason == "capacity" and self.retry:
+                self.retries[r.request_id] = \
+                    self.retries.get(r.request_id, 0) + 1
+                if r not in self.pending:
+                    self.pending.append(r)
+            else:
+                self.served.append(ServedRequest(
+                    r, False, plan=snapshot.plan, reason=reason,
+                    status=status, n_retries=self.retries.get(r.request_id, 0)))
+                self._event("reject", r.request_id, t)
+            return None
+        latency = self.planner.commit_latency_s(self.state, r, chosen)
+        self.res_memo.clear()  # the residual state just changed
+        depart = None
+        if t is not None and r.duration_s != INF:
+            depart = t + r.duration_s
+        rec = ServedRequest(
+            r, True, replanned=replanned, latency_s=latency, plan=chosen,
+            status=status, admit_s=t, depart_s=depart,
+            n_retries=self.retries.get(r.request_id, 0))
+        self.served.append(rec)
+        self.concurrent += 1
+        self._event("admit", r.request_id, t)
+        return rec
+
+    def release(self, rec: ServedRequest, t: float | None = None) -> None:
+        """A departing chain returns its exact demand to the fabric."""
+        self.state.release(self.planner.profile, rec.request, rec.plan)
+        self.res_memo.clear()  # the residual state just changed
+        self.concurrent -= 1
+        self._event("depart", rec.request.request_id, t)
+
+    def drain_pending(self, t: float | None = None) -> list[ServedRequest]:
+        """Re-attempt the retry queue in arrival order against the current
+        residuals; returns the newly admitted records (the driver schedules
+        their departures)."""
+        admitted = []
+        for r in sorted(self.pending, key=lambda r: (r.arrival_s,
+                                                     r.request_id)):
+            rec = self.try_admit(r, t)
+            if rec is not None:
+                self.pending.remove(r)
+                admitted.append(rec)
+        return admitted
+
+    def reject_pending(self, t: float | None = None) -> None:
+        """Final rejections: the event stream drained with these still queued."""
+        for r in sorted(self.pending, key=lambda r: (r.arrival_s,
+                                                     r.request_id)):
+            snapshot = self.snapshot_for(r)
+            self.served.append(ServedRequest(
+                r, False, plan=snapshot.plan, reason="capacity",
+                status=snapshot.status,
+                n_retries=self.retries.get(r.request_id, 0)))
+            self._event("reject", r.request_id, t)
+        self.pending.clear()
+
+    def conservation_ok(self) -> bool:
+        return self.state.conservation_ok(self.planner.profile)

@@ -5,11 +5,14 @@ Admission round (one call to :meth:`ServePlanner.admit`):
 1. **Pre-solve** every distinct request shape once against the *snapshot*
    (the uncontended base network) with shared caches — one `EvalCache`
    (batch/mode-keyed) and the network's dense frontier matrices, so the
-   vectorized DFTS relaxations are shared across the whole fleet.
+   vectorized DFTS relaxations are shared across the whole fleet.  With a
+   :class:`~repro.serve.plancache.PlanCache` attached, shapes already solved
+   by *earlier* rounds/ticks are reused too (the gateway's cross-stream
+   dedup); misses go through one `solve_batch` call.
 2. **Order** the fleet with the chosen admission policy (pre-solved solo
    latencies feed the latency-greedy policy).
-3. **Admit** in order with residual-capacity accounting: a request's snapshot
-   plan is checked against the live residuals; if it no longer fits,
+3. **Admit** in order through the shared :class:`AdmissionCore`: a request's
+   snapshot plan is checked against the live residuals; if it no longer fits,
    capacity-aware **replanning** re-runs the solver against the materialized
    residual network (reduced link rates and node capacities) before the
    request is declared blocked.  Accepted plans are committed and their
@@ -31,83 +34,14 @@ from repro.core import (EvalCache, ModelProfile, PhysicalNetwork, Plan,
                         PlanEvaluator, SolveOutcome, get_solver, solve,
                         solve_batch)
 
+from .admission import INF, AdmissionCore, ServedRequest
+from .plancache import PlanCache
 from .policies import POLICIES
 from .requests import ServeRequest
 from .residual import ResidualState
 
-INF = float("inf")
-
-
-@dataclass
-class ServedRequest:
-    """Admission outcome of one request (in admission/decision order)."""
-
-    request: ServeRequest
-    accepted: bool
-    replanned: bool = False
-    latency_s: float | None = None
-    plan: Plan | None = None
-    reason: str = ""  # "" | "no-plan" | "capacity"
-    status: str | None = None  # SolveOutcome.status of the winning solve
-    # Event-driven fields (ServeSim, docs/sim.md); None for static rounds.
-    admit_s: float | None = None  # admission timestamp (>= arrival on retry)
-    depart_s: float | None = None  # admit_s + duration_s when finite
-    n_retries: int = 0  # failed capacity attempts before the final decision
-
-    def to_dict(self) -> dict:
-        r = self.request
-        d = {
-            "request_id": r.request_id,
-            "source": r.source,
-            "destination": r.destination,
-            "batch_size": r.batch_size,
-            "mode": r.mode,
-            "K": r.K,
-            "candidates": [list(c) for c in r.candidates],
-            "arrival_s": r.arrival_s,
-            "rate_rps": r.rate_rps,
-            "model_id": r.model_id,
-            "schedule": r.schedule,
-            "n_microbatches": r.n_microbatches,
-            # inf round-trips as null so the artifacts stay strict JSON
-            "duration_s": None if r.duration_s == INF else r.duration_s,
-            "accepted": self.accepted,
-            "replanned": self.replanned,
-            "latency_s": self.latency_s,
-            "reason": self.reason,
-            "status": self.status,
-            "admit_s": self.admit_s,
-            "depart_s": self.depart_s,
-            "n_retries": self.n_retries,
-        }
-        if self.plan is not None:
-            d["segments"] = [list(s) for s in self.plan.segments]
-            d["placement"] = list(self.plan.placement)
-            d["paths"] = [list(p) for p in self.plan.paths]
-            d["tail_path"] = list(self.plan.tail_path)
-        return d
-
-    @classmethod
-    def from_dict(cls, d: dict) -> "ServedRequest":
-        duration = d.get("duration_s")
-        req = ServeRequest(
-            request_id=d["request_id"], source=d["source"],
-            destination=d["destination"], batch_size=d["batch_size"],
-            mode=d["mode"], K=d["K"],
-            candidates=tuple(tuple(c) for c in d["candidates"]),
-            arrival_s=d["arrival_s"], rate_rps=d["rate_rps"],
-            model_id=d["model_id"], schedule=d.get("schedule", "seq"),
-            n_microbatches=d.get("n_microbatches", 1),
-            duration_s=INF if duration is None else duration)
-        plan = None
-        if "segments" in d:
-            plan = Plan(segments=[tuple(s) for s in d["segments"]],
-                        placement=list(d["placement"]),
-                        paths=[list(p) for p in d["paths"]],
-                        tail_path=list(d["tail_path"]))
-        return cls(req, d["accepted"], d["replanned"], d["latency_s"], plan,
-                   d.get("reason", ""), d.get("status"), d.get("admit_s"),
-                   d.get("depart_s"), d.get("n_retries", 0))
+__all__ = ["INF", "ServedRequest", "ServeOutcome", "ServePlanner",
+           "replay_verify"]
 
 
 @dataclass
@@ -119,6 +53,10 @@ class ServeOutcome:
     served: list[ServedRequest] = field(default_factory=list)
     wall_time_s: float = 0.0
     n_presolved: int = 0  # distinct request shapes actually solved in step 1
+    # planning-engine cache counters of the round (EvalCache hits/misses,
+    # PlanCache hits/misses/evictions when one is attached) — see
+    # solver_stats(); empty when the driver recorded none.
+    cache_stats: dict = field(default_factory=dict)
 
     @property
     def n_requests(self) -> int:
@@ -150,14 +88,16 @@ class ServeOutcome:
 
     def solver_stats(self) -> dict:
         """Per-round solve bookkeeping for sweep artifacts (``solver_stats``
-        column): distinct shapes pre-solved, replans, per-status counts."""
+        column): distinct shapes pre-solved, replans, per-status counts, and
+        the planning-engine cache counters."""
         counts: dict[str, int] = {}
         for s in self.served:
             if s.status is not None:
                 counts[s.status] = counts.get(s.status, 0) + 1
         return {"n_presolved": self.n_presolved,
                 "n_replanned": self.n_replanned,
-                "statuses": counts}
+                "statuses": counts,
+                "cache": self.cache_stats}
 
     def accepted_latencies(self) -> list[float]:
         return [s.latency_s for s in self.served
@@ -196,6 +136,7 @@ class ServePlanner:
     def __init__(self, net: PhysicalNetwork, profile: ModelProfile,
                  solver: str = "bcd", replan: bool = True,
                  cache: EvalCache | None = None,
+                 plan_cache: PlanCache | None = None,
                  solver_kwargs: dict | None = None):
         get_solver(solver)  # uniform unknown-solver error from the registry
         self.net = net
@@ -206,6 +147,25 @@ class ServePlanner:
         # snapshot cache: batch/mode are part of EvalCache keys, so one cache
         # serves the whole heterogeneous fleet against the base network
         self.cache = cache if cache is not None else EvalCache()
+        # optional cross-round snapshot-outcome cache (the gateway's Layer 2):
+        # keyed by ProblemInstance content hash, so recurring shapes skip the
+        # solver entirely on later rounds/ticks
+        self.plan_cache = plan_cache
+        # request-shape tuple -> content hash.  The sha256-of-canonical-JSON
+        # identity is ~50us per request; under a streaming gateway the same
+        # few shapes recur for the whole run, so the hash is computed once
+        # per shape instead of once per request.  The tuple is strictly finer
+        # than the content identity (pipe with M=1 normalizes to seq in the
+        # hash), which can only cost a duplicate hash, never alias two keys.
+        self._key_memo: dict[tuple, str] = {}
+
+    def _solve_key(self, r: ServeRequest) -> str:
+        ident = (r.model_id, r.source, r.destination, r.batch_size, r.mode,
+                 r.K, r.candidates, r.schedule, r.n_microbatches)
+        key = self._key_memo.get(ident)
+        if key is None:
+            key = self._key_memo[ident] = r.solve_key(self.net, self.profile)
+        return key
 
     def _solve(self, net: PhysicalNetwork, request: ServeRequest,
                cache: EvalCache | None) -> SolveOutcome:
@@ -217,21 +177,33 @@ class ServePlanner:
                             dict[int, float]]:
         """Solve each distinct request shape once on the snapshot network,
         deduped by ProblemInstance content hash (the engine-wide instance
-        identity).  Returns (outcome by key, key by request id, solo-latency
-        estimate by request id — the policies' ordering input)."""
+        identity) and — when a :class:`PlanCache` is attached — by what
+        earlier rounds already solved.  Returns (outcome by key, key by
+        request id, solo-latency estimate by request id — the policies'
+        ordering input)."""
         keys: dict[int, str] = {}
         seen: set[str] = set()
         order: list[str] = []  # first-seen key order (scalar-loop parity)
         problems: list = []
+        presolved: dict[str, SolveOutcome] = {}
         for r in requests:
-            key = keys[r.request_id] = r.solve_key(self.net, self.profile)
-            if key not in seen:
-                seen.add(key)
-                order.append(key)
-                problems.append(r.problem(self.net, self.profile))
-        outcomes = solve_batch(problems, self.solver_name, cache=self.cache,
-                               **self.solver_kwargs)
-        presolved = dict(zip(order, outcomes))
+            key = keys[r.request_id] = self._solve_key(r)
+            if key in seen:
+                continue
+            seen.add(key)
+            if self.plan_cache is not None:
+                hit = self.plan_cache.get(key)
+                if hit is not None:
+                    presolved[key] = hit
+                    continue
+            order.append(key)
+            problems.append(r.problem(self.net, self.profile))
+        outcomes = (solve_batch(problems, self.solver_name, cache=self.cache,
+                                **self.solver_kwargs) if problems else [])
+        presolved.update(zip(order, outcomes))
+        if self.plan_cache is not None:
+            for key, out in zip(order, outcomes):
+                self.plan_cache.put(key, out)
         estimates = {r.request_id: presolved[keys[r.request_id]].latency_s
                      for r in requests}
         return presolved, keys, estimates
@@ -242,9 +214,8 @@ class ServePlanner:
                 ) -> tuple[Plan | None, bool, str | None, str]:
         """One admission attempt against the live residuals: try the
         snapshot plan, else replan on the materialized residual network.
-        Returns ``(plan | None, replanned, status, reason)`` — the shared
-        core of the static :meth:`admit` round and the event-driven
-        :class:`~repro.serve.sim.ServeSim` arrivals/retries.
+        Returns ``(plan | None, replanned, status, reason)`` — the capacity
+        half of :class:`AdmissionCore.try_admit`.
 
         ``res_net_cache`` (a per-mode dict) memoizes the materialized
         residual network across *consecutive failed* attempts — the caller
@@ -271,16 +242,31 @@ class ServePlanner:
                 return res.plan, True, res.status, ""
         return None, False, snapshot.status, "capacity"
 
+    def planned_latency_s(self, state: ResidualState, r: ServeRequest,
+                          plan: Plan) -> float:
+        """The latency `plan` would see on the residual fabric as it stands —
+        evaluated on the state's live keep-saturated view (saturated links
+        clamped, not dropped: a zero-demand tail may legitimately cross
+        them), *without* committing.  The SLO gate and the commit path both
+        read this one number."""
+        ev = PlanEvaluator(state.live_view(), self.profile,
+                           r.chain_request(), cache=self.cache.fork_fits())
+        return ev.latency_s(plan)
+
     def commit_latency_s(self, state: ResidualState, r: ServeRequest,
                          plan: Plan) -> float:
         """Commit an admitted plan and return its latency, evaluated on the
-        residual fabric the request was admitted onto (keeping saturated
-        links: a zero-demand tail may legitimately cross them)."""
-        ev = PlanEvaluator(state.materialize(keep_saturated=True),
-                           self.profile, r.chain_request())
-        latency = ev.latency_s(plan)
+        residual fabric the request was admitted onto."""
+        latency = self.planned_latency_s(state, r, plan)
         state.commit(self.profile, r, plan)
         return latency
+
+    def round_cache_stats(self) -> dict:
+        """The planning-engine cache counters a driver stamps on its outcome."""
+        stats = {"eval_cache": self.cache.stats()}
+        if self.plan_cache is not None:
+            stats["plan_cache"] = self.plan_cache.stats()
+        return stats
 
     def admit(self, requests: list[ServeRequest],
               policy: str = "fcfs") -> ServeOutcome:
@@ -295,26 +281,18 @@ class ServePlanner:
         # 2. policy order
         order = POLICIES[policy](requests, estimates)
 
-        # 3. admission with residual accounting + capacity-aware replanning
-        state = ResidualState(self.net)
-        served: list[ServedRequest] = []
+        # 3. admission with residual accounting + capacity-aware replanning —
+        # the static round is the simplest AdmissionCore driver: one pass, no
+        # timestamps, no retries
+        core = AdmissionCore(self, presolved, keys)
         for r in order:
-            snapshot = presolved[keys[r.request_id]]
-            chosen, replanned, status, reason = self.attempt(state, r, snapshot)
-            if chosen is None:
-                served.append(ServedRequest(
-                    r, False, replanned=False, plan=snapshot.plan,
-                    reason=reason, status=status))
-                continue
-            latency = self.commit_latency_s(state, r, chosen)
-            served.append(ServedRequest(r, True, replanned=replanned,
-                                        latency_s=latency, plan=chosen,
-                                        status=status))
-        assert state.conservation_ok(self.profile)
+            core.try_admit(r)
+        assert core.conservation_ok()
         return ServeOutcome(policy=policy, solver=self.solver_name,
-                            served=served,
+                            served=core.served,
                             wall_time_s=time.perf_counter() - t0,
-                            n_presolved=len(presolved))
+                            n_presolved=len(presolved),
+                            cache_stats=self.round_cache_stats())
 
 
 def replay_verify(net: PhysicalNetwork, profile: ModelProfile,

@@ -128,12 +128,57 @@ class ResidualState:
     # shared compute-time memo for the pipelined bottleneck lookups behind
     # plan_demand — one cache per fabric state, reused across the whole round
     eval_cache: EvalCache = field(default_factory=EvalCache, repr=False)
+    # per-key committed-chain counts mirroring each tally.  Float tallies
+    # accumulate summation residue over long commit/release streams (each
+    # `+= f` / `-= f` pair can leave ~ulp(peak) behind), so "this key should
+    # be empty now" cannot be decided from the float alone once the residue
+    # outgrows _EPS_ABS.  The counts are exact integer bookkeeping: when the
+    # last contributing chain departs, release snaps the key to exactly zero
+    # instead of trusting the drifted float.
+    _cnt_link_fw: dict[tuple[str, str], int] = field(
+        default_factory=lambda: defaultdict(int), repr=False, compare=False)
+    _cnt_link_bw: dict[tuple[str, str], int] = field(
+        default_factory=lambda: defaultdict(int), repr=False, compare=False)
+    _cnt_mem: dict[str, int] = field(
+        default_factory=lambda: defaultdict(int), repr=False, compare=False)
+    _cnt_disk: dict[str, int] = field(
+        default_factory=lambda: defaultdict(int), repr=False, compare=False)
+    # (request demand identity, id(plan)) -> (plan, profile, PlanDemand).
+    # One admission computes the same demand three times (fits, commit,
+    # eventually release) and a streaming gateway sees the same few
+    # (shape, snapshot-plan) pairs thousands of times; the demand is a pure
+    # function of those inputs on the fixed base fabric, so memoize it.  The
+    # stored plan/profile references both pin the ids against reuse and are
+    # identity-checked on lookup.
+    _demand_memo: dict = field(default_factory=dict, repr=False, compare=False)
+    # lazily-built keep-saturated materialized view, updated *incrementally*
+    # on commit/release (only the links/nodes a plan touches) so the
+    # per-admission latency evaluation does not rebuild the whole topology
+    _live: PhysicalNetwork | None = field(default=None, init=False,
+                                          repr=False, compare=False)
 
     # ---------------------------------------------------------------- queries
+    def _demand(self, profile: ModelProfile, request: ServeRequest,
+                plan: Plan) -> PlanDemand:
+        """Memoized :func:`plan_demand` (see ``_demand_memo``): keyed by the
+        request fields the demand is a function of plus the plan's identity,
+        so clones of a recurring shape admitted against a cached snapshot
+        plan share one computation."""
+        ident = (request.model_id, request.source, request.destination,
+                 request.batch_size, request.mode, request.rate_rps,
+                 request.schedule, request.n_microbatches)
+        key = (ident, id(plan))
+        hit = self._demand_memo.get(key)
+        if hit is not None and hit[0] is plan and hit[1] is profile:
+            return hit[2]
+        d = plan_demand(profile, request, plan, self.base, self.eval_cache)
+        self._demand_memo[key] = (plan, profile, d)
+        return d
+
     def fits(self, profile: ModelProfile, request: ServeRequest,
              plan: Plan) -> bool:
         """Would committing `plan` keep every link/node within capacity?"""
-        d = plan_demand(profile, request, plan, self.base, self.eval_cache)
+        d = self._demand(profile, request, plan)
         for (u, v), f in d.link_fw_bps.items():
             spec = self.base.links[(u, v)]
             if not _fits_cap(self.used_link_fw[(u, v)] + f, spec.bw_fw):
@@ -153,26 +198,34 @@ class ResidualState:
 
     def commit(self, profile: ModelProfile, request: ServeRequest,
                plan: Plan) -> None:
-        d = plan_demand(profile, request, plan, self.base, self.eval_cache)
+        d = self._demand(profile, request, plan)
         for k, f in d.link_fw_bps.items():
             self.used_link_fw[k] += f
+            self._cnt_link_fw[k] += 1
         for k, g in d.link_bw_bps.items():
             self.used_link_bw[k] += g
+            self._cnt_link_bw[k] += 1
         for n, m in d.node_mem_bytes.items():
             self.used_mem[n] += m
+            self._cnt_mem[n] += 1
         for n, s in d.node_disk_bytes.items():
             self.used_disk[n] += s
+            self._cnt_disk[n] += 1
         self.committed.append((request, plan))
+        self._update_live(d)
 
     def release(self, profile: ModelProfile, request: ServeRequest,
                 plan: Plan) -> None:
         """Exact inverse of :meth:`commit`: a departing chain returns its
         :class:`PlanDemand` to the fabric.
 
-        The demand is recomputed through the same shared ``eval_cache``, so
-        the subtracted floats are bit-identical to the ones :meth:`commit`
-        added; tallies driven to (numerically) zero are pruned so a fully
-        drained state compares clean against a fresh one.  Raises ``KeyError``
+        The demand comes from the same memo :meth:`commit` populated, so the
+        subtracted floats are bit-identical to the ones :meth:`commit`
+        added; a key whose last contributor departs (per the exact integer
+        counts) is snapped to exactly zero — summation residue from hundreds
+        of commit/release cycles on a hot key can exceed any fixed epsilon,
+        so emptiness is decided by the count, not the float.  A fully drained
+        state therefore compares clean against a fresh one.  Raises ``KeyError``
         if the (request, plan) pair was never committed — releasing a chain
         twice (or one that was never admitted) is a caller bug, and silently
         subtracting would break :meth:`conservation_ok`, which re-derives
@@ -184,15 +237,23 @@ class ResidualState:
         else:
             raise KeyError(f"release of uncommitted chain "
                            f"request_id={request.request_id}")
-        d = plan_demand(profile, request, plan, self.base, self.eval_cache)
-        for tally, demand in ((self.used_link_fw, d.link_fw_bps),
-                              (self.used_link_bw, d.link_bw_bps),
-                              (self.used_mem, d.node_mem_bytes),
-                              (self.used_disk, d.node_disk_bytes)):
+        d = self._demand(profile, request, plan)
+        for tally, cnt, demand in (
+                (self.used_link_fw, self._cnt_link_fw, d.link_fw_bps),
+                (self.used_link_bw, self._cnt_link_bw, d.link_bw_bps),
+                (self.used_mem, self._cnt_mem, d.node_mem_bytes),
+                (self.used_disk, self._cnt_disk, d.node_disk_bytes)):
             for k, v in demand.items():
+                cnt[k] -= 1
+                if cnt[k] <= 0:
+                    # last contributor gone: exact-zero snap (see docstring)
+                    del cnt[k]
+                    tally.pop(k, None)
+                    continue
                 tally[k] -= v
                 if abs(tally[k]) <= _EPS_ABS:
                     del tally[k]
+        self._update_live(d)
 
     # ---------------------------------------------------------- materialization
     def materialize(self, mode: str | None = None,
@@ -210,7 +271,8 @@ class ResidualState:
         ``keep_saturated=True`` keeps every link (rates clamped to the floor
         instead of dropping) — used to *evaluate* an admitted plan's latency,
         where zero-demand tail subpaths may legitimately cross saturated
-        links.
+        links.  Prefer :meth:`live_view` for that: it maintains the same view
+        incrementally instead of rebuilding the topology per admission.
         """
         out = PhysicalNetwork()
         for name, spec in self.base.nodes.items():
@@ -231,6 +293,41 @@ class ResidualState:
                                         spec.delay_fw, spec.delay_bw))
         return out
 
+    def live_view(self) -> PhysicalNetwork:
+        """The keep-saturated residual view, maintained *incrementally*.
+
+        Bit-identical to ``materialize(keep_saturated=True)`` at every state
+        — the update below recomputes exactly the same clamp expressions from
+        the same running tallies, but only for the links/nodes the committed
+        (released) plan's demand touches, so the per-admission latency
+        evaluation in a long-running gateway costs O(plan) instead of
+        O(topology).  Treat as read-only; it is patched in place on every
+        commit/release.
+        """
+        if self._live is None:
+            self._live = self.materialize(keep_saturated=True)
+        return self._live
+
+    def _update_live(self, d: PlanDemand) -> None:
+        live = self._live
+        if live is None:
+            return
+        for (u, v) in set(d.link_fw_bps) | set(d.link_bw_bps):
+            spec = self.base.links[(u, v)]
+            fw = spec.bw_fw - self.used_link_fw[(u, v)]
+            bw = spec.bw_bw - self.used_link_bw[(u, v)]
+            live.links[(u, v)] = LinkSpec(max(fw, _MIN_RATE_BPS),
+                                          max(bw, _MIN_RATE_BPS),
+                                          spec.delay_fw, spec.delay_bw)
+        for name in set(d.node_mem_bytes) | set(d.node_disk_bytes):
+            spec = self.base.nodes[name]
+            live.nodes[name] = NodeSpec(
+                name, spec.compute,
+                max(0.0, spec.mem_capacity - self.used_mem[name]),
+                max(0.0, spec.disk_capacity - self.used_disk[name]))
+        # direct spec assignment bypasses add_link/add_node invalidation
+        live.clear_routing_cache()
+
     # ----------------------------------------------------------- verification
     def conservation_ok(self, profile: ModelProfile) -> bool:
         """Recompute usage from the committed plans and confirm (a) it matches
@@ -240,7 +337,7 @@ class ResidualState:
         mem: dict[str, float] = defaultdict(float)
         disk: dict[str, float] = defaultdict(float)
         for request, plan in self.committed:
-            d = plan_demand(profile, request, plan, self.base, self.eval_cache)
+            d = self._demand(profile, request, plan)
             for k, f in d.link_fw_bps.items():
                 fw[k] += f
             for k, g in d.link_bw_bps.items():

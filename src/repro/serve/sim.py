@@ -13,8 +13,9 @@ that process exactly:
   timestamp order; at equal timestamps departures are processed first, so
   capacity freed "now" is available to arrivals "now".
 * **arrivals** run the same snapshot-fits / residual-replan / commit
-  admission as the static round (the shared :meth:`ServePlanner.attempt`),
-  against the residual state *at that instant*.
+  admission as the static round (the shared
+  :class:`~repro.serve.admission.AdmissionCore`), against the residual state
+  *at that instant*.
 * **departures** release the departing chain's exact :class:`PlanDemand`
   through :meth:`ResidualState.release` — bit-identical floats to the ones
   its commit added, so conservation holds at every event.
@@ -41,7 +42,8 @@ import numpy as np
 
 from repro.core import ModelProfile, PhysicalNetwork, PlanEvaluator
 
-from .planner import INF, ServedRequest, ServeOutcome, ServePlanner
+from .admission import INF, AdmissionCore, ServedRequest
+from .planner import ServeOutcome, ServePlanner
 from .policies import POLICIES
 from .requests import ServeRequest
 from .residual import ResidualState
@@ -118,13 +120,20 @@ class SimOutcome(ServeOutcome):
         contention moves the latency distribution over the run."""
         end = self.horizon_s
         width = end / n_epochs if end > 0 else 1.0
+
+        def admit_time(s: ServedRequest) -> float:
+            # explicit None check: admit_s == 0.0 is a legitimate admission
+            # at t=0, not a missing timestamp (records imported from a static
+            # round fall back to their arrival instant)
+            return s.admit_s if s.admit_s is not None else s.request.arrival_s
+
         epochs = []
         for e in range(n_epochs):
             lo, hi = e * width, (e + 1) * width
             lats = [s.latency_s for s in self.served
                     if s.accepted and s.latency_s is not None
-                    and lo <= (s.admit_s or 0.0)
-                    and ((s.admit_s or 0.0) < hi or e == n_epochs - 1)]
+                    and lo <= admit_time(s)
+                    and (admit_time(s) < hi or e == n_epochs - 1)]
             row = {"epoch": e, "start_s": lo, "end_s": hi, "n": len(lats)}
             for q in qs:
                 row[f"p{int(q)}"] = (float(np.percentile(np.asarray(lats), q))
@@ -184,7 +193,6 @@ class ServeSim:
             raise ValueError(f"policy must be one of {sorted(POLICIES)}")
         t0 = time.perf_counter()
         planner = self.planner
-        profile = planner.profile
         presolved, keys, estimates = planner.presolve(requests)
 
         # one arrival event per distinct timestamp; the admission policy
@@ -198,92 +206,40 @@ class ServeSim:
                              for t, batch in batches.items()]
         heapq.heapify(heap)
 
-        state = ResidualState(planner.net)
-        served: list[ServedRequest] = []
-        timeline: list[dict] = []
-        pending: list[ServeRequest] = []  # capacity-blocked, awaiting retry
-        retries: dict[int, int] = {}
-        concurrent = 0
+        core = AdmissionCore(planner, presolved, keys, retry=self.retry,
+                             record_events=True)
         horizon = 0.0
 
-        # Residual-network memo for planner.attempt, shared across the
-        # *failed* attempts of one arrival batch / retry drain (the state is
-        # unchanged between them); any commit or release invalidates it.
-        res_memo: dict = {}
-
-        def try_admit(t: float, r: ServeRequest) -> bool:
-            """One admission attempt at instant `t`; commits on success."""
-            nonlocal concurrent
-            snapshot = presolved[keys[r.request_id]]
-            chosen, replanned, status, reason = planner.attempt(
-                state, r, snapshot, res_net_cache=res_memo)
-            if chosen is None:
-                if reason == "capacity" and self.retry:
-                    retries[r.request_id] = retries.get(r.request_id, 0) + 1
-                    if r not in pending:
-                        pending.append(r)
-                else:
-                    served.append(ServedRequest(
-                        r, False, plan=snapshot.plan, reason=reason,
-                        status=status, n_retries=retries.get(r.request_id, 0)))
-                    timeline.append({"t": t, "event": "reject",
-                                     "request_id": r.request_id,
-                                     "concurrent": concurrent})
-                return False
-            latency = planner.commit_latency_s(state, r, chosen)
-            res_memo.clear()  # the residual state just changed
-            depart = t + r.duration_s if r.duration_s != INF else None
-            rec = ServedRequest(
-                r, True, replanned=replanned, latency_s=latency, plan=chosen,
-                status=status, admit_s=t, depart_s=depart,
-                n_retries=retries.get(r.request_id, 0))
-            served.append(rec)
-            concurrent += 1
-            timeline.append({"t": t, "event": "admit",
-                             "request_id": r.request_id,
-                             "concurrent": concurrent})
-            if depart is not None:
-                heapq.heappush(heap, (depart, _DEPART, next(tick), rec))
-            return True
+        def push_depart(rec: ServedRequest) -> None:
+            if rec.depart_s is not None:
+                heapq.heappush(heap, (rec.depart_s, _DEPART, next(tick), rec))
 
         while heap:
             t, prio, _, payload = heapq.heappop(heap)
             horizon = max(horizon, t)
             if prio == _DEPART:
-                rec: ServedRequest = payload
-                state.release(profile, rec.request, rec.plan)
-                res_memo.clear()  # the residual state just changed
-                concurrent -= 1
-                timeline.append({"t": t, "event": "depart",
-                                 "request_id": rec.request.request_id,
-                                 "concurrent": concurrent})
+                core.release(payload, t)
                 # drain all departures at this instant, then re-attempt the
                 # queue (in arrival order) against the fully freed residuals
                 more_departs_now = (heap and heap[0][0] == t
                                     and heap[0][1] == _DEPART)
-                if self.retry and pending and not more_departs_now:
-                    for r in sorted(pending, key=lambda r: (r.arrival_s,
-                                                            r.request_id)):
-                        if try_admit(t, r):
-                            pending.remove(r)
+                if self.retry and core.pending and not more_departs_now:
+                    for rec in core.drain_pending(t):
+                        push_depart(rec)
             else:
                 for r in POLICIES[policy](payload, estimates):
-                    try_admit(t, r)
+                    rec = core.try_admit(r, t)
+                    if rec is not None:
+                        push_depart(rec)
 
         # the event stream drained with these still queued: final rejections
-        for r in sorted(pending, key=lambda r: (r.arrival_s, r.request_id)):
-            snapshot = presolved[keys[r.request_id]]
-            served.append(ServedRequest(
-                r, False, plan=snapshot.plan, reason="capacity",
-                status=snapshot.status, n_retries=retries.get(r.request_id, 0)))
-            timeline.append({"t": horizon, "event": "reject",
-                             "request_id": r.request_id,
-                             "concurrent": concurrent})
-        assert state.conservation_ok(profile)
+        core.reject_pending(horizon)
+        assert core.conservation_ok()
         return SimOutcome(
-            policy=policy, solver=planner.solver_name, served=served,
+            policy=policy, solver=planner.solver_name, served=core.served,
             wall_time_s=time.perf_counter() - t0, n_presolved=len(presolved),
-            retry=self.retry, horizon_s=horizon, timeline=timeline)
+            cache_stats=planner.round_cache_stats(),
+            retry=self.retry, horizon_s=horizon, timeline=core.timeline)
 
 
 def replay_verify_sim(net: PhysicalNetwork, profile: ModelProfile,

@@ -29,8 +29,12 @@ CSV_FIELDS = [
     # event-driven sim columns (docs/sim.md); empty for static scenarios
     "sim", "hold_model", "duration_s", "retry",
     "blocking_probability", "peak_concurrent", "n_retried",
-    # static-vs-churn pairing (sim rows with a static counterpart only)
+    # static-vs-churn pairing (sim/gateway rows with a static counterpart)
     "static_acceptance", "churn_uplift",
+    # streaming gateway columns (docs/gateway.md); empty otherwise
+    "gateway", "batch_window_s", "max_queue", "slo_latency_s",
+    # cache observability (serve scenarios): hit rates over the run
+    "eval_cache_hit_rate", "plan_cache_hit_rate",
 ]
 
 
@@ -101,15 +105,23 @@ def write_artifacts(out_dir: str | Path, suite_name: str,
                 "latency_p95_s": _opt(r.latency_p95_s),
                 "latency_p99_s": _opt(r.latency_p99_s),
                 "sim": s.sim if s.n_requests > 1 else "",
-                "hold_model": s.hold_model if s.sim else "",
-                "duration_s": _opt(s.duration_s if s.sim else None),
-                "retry": s.retry if s.sim else "",
+                "hold_model": s.hold_model if (s.sim or s.gateway) else "",
+                "duration_s": _opt(s.duration_s if (s.sim or s.gateway)
+                                   else None),
+                "retry": s.retry if (s.sim or s.gateway) else "",
                 "blocking_probability": _opt(r.blocking_probability),
                 "peak_concurrent": _opt(r.peak_concurrent),
                 "n_retried": _opt(r.n_retried),
                 "static_acceptance": _opt(
                     cpair["static_acceptance"] if cpair else None),
                 "churn_uplift": _opt(cpair["uplift"] if cpair else None),
+                "gateway": s.gateway if s.n_requests > 1 else "",
+                "batch_window_s": _opt(s.batch_window_s if s.gateway
+                                       else None),
+                "max_queue": _opt(s.max_queue if s.gateway else None),
+                "slo_latency_s": _opt(s.slo_latency_s if s.gateway else None),
+                "eval_cache_hit_rate": _opt(r.eval_cache_hit_rate),
+                "plan_cache_hit_rate": _opt(r.plan_cache_hit_rate),
             })
     return {"json": json_path, "csv": csv_path}
 

@@ -65,26 +65,30 @@ def schedule_pairs(results: list[ScenarioResult]) -> dict[str, dict]:
 
 
 def churn_pairs(results: list[ScenarioResult]) -> dict[str, dict]:
-    """Map each *sim* (churn) scenario id to its static counterpart's
-    acceptance, pairing on :meth:`ScenarioSpec.churn_key` — identical fleet,
-    solver, and policy; only the churn knobs differ.  ``uplift`` is
-    ``churn acceptance - static acceptance`` (in ratio points): the headline
-    of the event-driven serving model, >= 0 whenever departures free capacity
-    that the one-shot round holds forever."""
+    """Map each dynamic (*sim* churn or *gateway* stream) scenario id to its
+    static counterpart's acceptance, pairing on
+    :meth:`ScenarioSpec.churn_key` — identical fleet, solver, and policy;
+    only the churn/gateway knobs differ.  ``uplift`` is
+    ``dynamic acceptance - static acceptance`` (in ratio points): the
+    headline of the event-driven serving model, >= 0 whenever departures
+    free capacity that the one-shot round holds forever."""
     static_by_key: dict[str, ScenarioResult] = {}
     for r in results:
-        if (r.spec.n_requests > 1 and not r.spec.sim and r.error is None
-                and r.acceptance_ratio is not None):
+        if (r.spec.n_requests > 1 and not r.spec.sim and not r.spec.gateway
+                and r.error is None and r.acceptance_ratio is not None):
             static_by_key[r.spec.churn_key()] = r
     pairs: dict[str, dict] = {}
     for r in results:
-        if not r.spec.sim or r.error is not None or r.acceptance_ratio is None:
+        if not (r.spec.sim or r.spec.gateway):
+            continue
+        if r.error is not None or r.acceptance_ratio is None:
             continue
         static = static_by_key.get(r.spec.churn_key())
         if static is None:
             continue
         pairs[r.spec.scenario_id()] = {
             "cell": r.spec.tags.get("cell", ""),
+            "driver": "gateway" if r.spec.gateway else "sim",
             "solver": r.spec.solver,
             "policy": r.spec.policy,
             "n_requests": r.spec.n_requests,
@@ -161,11 +165,19 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
                 row["latency_p50_s"] = r.latency_p50_s
                 row["latency_p95_s"] = r.latency_p95_s
                 row["latency_p99_s"] = r.latency_p99_s
-                if r.spec.sim:  # event-driven churn scenario (docs/sim.md)
+                if r.eval_cache_hit_rate is not None:
+                    row["eval_cache_hit_rate"] = r.eval_cache_hit_rate
+                if r.plan_cache_hit_rate is not None:
+                    row["plan_cache_hit_rate"] = r.plan_cache_hit_rate
+                if r.spec.sim or r.spec.gateway:  # event-driven scenario
                     row["sim"] = True
                     row["blocking_probability"] = r.blocking_probability
                     row["peak_concurrent"] = r.peak_concurrent
                     row["n_retried"] = r.n_retried
+                if r.spec.gateway:  # streaming gateway (docs/gateway.md)
+                    row["gateway"] = True
+                    if r.gateway:
+                        row["gateway_stats"] = r.gateway
                 a["accept_sum"] += r.acceptance_ratio
                 a["n_accept"] += 1
                 if r.feasible:
@@ -273,7 +285,7 @@ def format_report(report: dict) -> str:
             f"max {cc['max_uplift']:+.2f}")
         for sid, p in sorted(cc["pairs"].items(), key=lambda kv: kv[1]["cell"]):
             lines.append(
-                f"  {p['cell']:<16} {p['solver']:<8} "
+                f"  {p['cell']:<16} {p['driver']:<7} {p['solver']:<8} "
                 f"static {p['static_accepted']}/{p['n_requests']} -> churn "
                 f"{p['churn_accepted']}/{p['n_requests']} "
                 f"(uplift {p['uplift']:+.2f}, peak {p['peak_concurrent']} "

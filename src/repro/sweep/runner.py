@@ -70,6 +70,11 @@ class ScenarioResult:
     peak_concurrent: int | None = None
     n_retried: int | None = None
     sim: dict | None = None  # SimOutcome.sim_summary(): curves, epochs, ...
+    # cache observability (docs/gateway.md): hit rates over the scenario run
+    eval_cache_hit_rate: float | None = None
+    plan_cache_hit_rate: float | None = None
+    # gateway scenarios (spec.gateway): GatewayOutcome.gateway_stats summary
+    gateway: dict | None = None
 
     def to_dict(self) -> dict:
         d = asdict(self)
@@ -125,14 +130,25 @@ def clear_context() -> None:
 
 def _run_serve_scenario(spec: ScenarioSpec, net, profile, cache) -> ScenarioResult:
     """One fleet scenario (spec.n_requests > 1) through repro.serve: a static
-    admission round, or — with ``spec.sim`` — the event-driven `ServeSim`."""
-    from repro.serve import ServePlanner, ServeSim
+    admission round, the event-driven `ServeSim` (``spec.sim``), or the
+    long-running `ServeGateway` (``spec.gateway``, docs/gateway.md)."""
+    from repro.serve import (GatewayConfig, ServeGateway, ServePlanner,
+                             ServeSim)
 
     fleet = spec.build_fleet(net)
     if spec.sim:
         runner = ServeSim(net, profile, solver=spec.solver, cache=cache,
                           retry=spec.retry, solver_kwargs=spec.solver_kwargs)
         outcome = runner.run(fleet, policy=spec.policy)
+    elif spec.gateway:
+        gw = ServeGateway(
+            net, profile, solver=spec.solver, policy=spec.policy,
+            config=GatewayConfig(batch_window_s=spec.batch_window_s,
+                                 max_queue=spec.max_queue,
+                                 slo_latency_s=spec.slo_latency_s,
+                                 retry=spec.retry),
+            cache=cache, solver_kwargs=spec.solver_kwargs)
+        outcome = gw.run_stream(fleet)
     else:
         planner = ServePlanner(net, profile, solver=spec.solver, cache=cache,
                                solver_kwargs=spec.solver_kwargs)
@@ -152,11 +168,16 @@ def _run_serve_scenario(spec: ScenarioSpec, net, profile, cache) -> ScenarioResu
         latency_p99_s=s["latency_p99_s"],
         served=[sr.to_dict() for sr in outcome.served],
     )
-    if spec.sim:
+    cs = outcome.cache_stats or {}
+    res.eval_cache_hit_rate = cs.get("eval_cache", {}).get("hit_rate")
+    res.plan_cache_hit_rate = cs.get("plan_cache", {}).get("hit_rate")
+    if spec.sim or spec.gateway:
         res.blocking_probability = outcome.blocking_probability
         res.peak_concurrent = outcome.peak_concurrent
         res.n_retried = outcome.n_retried
         res.sim = outcome.sim_summary()
+    if spec.gateway:
+        res.gateway = outcome.gateway_stats
     return res
 
 
@@ -238,7 +259,9 @@ def verify_result(result: ScenarioResult, atol: float = 1e-9) -> bool:
         if abs((n_acc / len(served)) - result.acceptance_ratio) > atol:
             return False
         net, profile = spec.build_network(), spec.build_profile()
-        if spec.sim:
+        if spec.sim or spec.gateway:
+            # gateway traces carry the same admit/depart timestamps as sim
+            # traces, so the event-replay verifier covers both drivers
             n_blocked = sum(1 for s in served
                             if not s.accepted and s.reason == "capacity")
             if abs((n_blocked / len(served))

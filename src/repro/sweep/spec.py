@@ -34,9 +34,11 @@ from repro.core import (
 from repro.serve.policies import POLICY_NAMES
 from repro.serve.requests import ARRIVALS, HOLD_MODELS
 
-# v5: event-driven serving sim (sim/hold_model/duration_s/retry knobs, churn
-# metrics + error capture in results); v4: engine dispatch (status + stats)
-SUITE_SCHEMA_VERSION = 5
+# v6: serving gateway (gateway/batch_window_s/max_queue/slo_latency_s knobs,
+# cache hit-rate columns); v5: event-driven serving sim (sim/hold_model/
+# duration_s/retry knobs, churn metrics + error capture in results); v4:
+# engine dispatch (status + stats)
+SUITE_SCHEMA_VERSION = 6
 
 # ------------------------------------------------------------------ topologies
 TOPOLOGIES = {
@@ -142,6 +144,14 @@ class ScenarioSpec:
     hold_model: str = "none"  # none | fixed | exp (chain holding times)
     duration_s: float | None = None  # holding time (fixed) / mean (exp)
     retry: bool = False  # re-attempt capacity-blocked requests on departures
+    # Serving gateway (repro.serve.gateway, docs/gateway.md): gateway=True
+    # streams the fleet through a long-running ServeGateway — batched
+    # admission ticks over an incremental residual view with a warm PlanCache
+    # — instead of one static round (sim) loop.
+    gateway: bool = False
+    batch_window_s: float = 0.0  # arrival grouping window per admission tick
+    max_queue: int | None = None  # bounded admission queue (None: unbounded)
+    slo_latency_s: float | None = None  # reject plans slower than this SLO
     name: str = ""  # optional human label; not part of the content hash
     tags: dict = field(default_factory=dict)  # free-form grouping metadata
 
@@ -167,10 +177,28 @@ class ScenarioSpec:
             raise ValueError(f"hold_model must be one of {HOLD_MODELS}")
         if self.sim and self.n_requests < 2:
             raise ValueError("sim=True needs a fleet (n_requests > 1)")
+        if self.gateway:
+            if self.sim:
+                raise ValueError("sim and gateway are mutually exclusive "
+                                 "drivers of the same fleet")
+            if self.n_requests < 2:
+                raise ValueError("gateway=True needs a fleet (n_requests > 1)")
+        if self.batch_window_s < 0:
+            raise ValueError("batch_window_s must be >= 0")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None for unbounded)")
+        if self.slo_latency_s is not None and not self.slo_latency_s > 0:
+            raise ValueError("slo_latency_s must be > 0 (or None)")
+        if not self.gateway and (self.batch_window_s != 0.0
+                                 or self.max_queue is not None
+                                 or self.slo_latency_s is not None):
+            raise ValueError("batch_window_s / max_queue / slo_latency_s "
+                             "require gateway=True")
         if self.hold_model != "none":
-            if not self.sim:
-                raise ValueError("hold_model requires sim=True (holding "
-                                 "times only act through ServeSim departures)")
+            if not (self.sim or self.gateway):
+                raise ValueError("hold_model requires sim=True or "
+                                 "gateway=True (holding times only act "
+                                 "through departures)")
             if self.duration_s is None or not (
                     self.duration_s > 0 and math.isfinite(self.duration_s)):
                 raise ValueError(f"hold_model={self.hold_model!r} needs a "
@@ -179,8 +207,8 @@ class ScenarioSpec:
         elif self.duration_s is not None:
             raise ValueError("duration_s is only meaningful with "
                              "hold_model in ('fixed', 'exp')")
-        if self.retry and not self.sim:
-            raise ValueError("retry requires sim=True")
+        if self.retry and not (self.sim or self.gateway):
+            raise ValueError("retry requires sim=True or gateway=True")
         self.drop_links = [list(p) for p in self.drop_links]
         if self.candidates is not None:
             self.candidates = [list(c) for c in self.candidates]
@@ -234,7 +262,8 @@ class ScenarioSpec:
         policy) share this key, which is what the report's static-vs-churn
         acceptance-uplift pairing uses."""
         d = self.to_dict()
-        for f in ("name", "tags", "sim", "hold_model", "duration_s", "retry"):
+        for f in ("name", "tags", "sim", "hold_model", "duration_s", "retry",
+                  "gateway", "batch_window_s", "max_queue", "slo_latency_s"):
             d.pop(f, None)
         return json.dumps(d, sort_keys=True, separators=(",", ":"))
 

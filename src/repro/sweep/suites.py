@@ -255,6 +255,47 @@ def nsfnet_churn(quick: bool = False,
     return specs
 
 
+def nsfnet_gateway(quick: bool = False,
+                   policies: tuple[str, ...] = ("fcfs",),
+                   schemes: tuple[str, ...] = ("bcd",),
+                   hold_s: float = 4.0,
+                   windows: tuple[float, ...] | None = None
+                   ) -> list[ScenarioSpec]:
+    """Streaming admission through the `ServeGateway` (docs/gateway.md):
+    every cell is one Poisson fleet admitted twice — once as the static
+    one-shot round and once streamed through the gateway with
+    Exponential(mean `hold_s`) holding times, the retry queue, and a swept
+    arrival batching window.  Variants share the identical fleet and pair on
+    ``ScenarioSpec.churn_key()``; the gateway rows additionally surface the
+    plan-cache / eval-cache hit rates and per-tick stats in the artifact."""
+    if windows is None:
+        windows = (0.0, 0.5) if quick else (0.0, 0.25, 0.5, 1.0)
+    fleets = [16, 32] if quick else [8, 16, 32, 64]
+    seeds = 1 if quick else 3
+    specs = []
+    for n in fleets:
+        for policy in policies:
+            for solver in schemes:
+                for seed in range(seeds):
+                    base = dict(
+                        topology="nsfnet", topology_kwargs={"source": SOURCE},
+                        profile="resnet101", source=SOURCE, destination=DEST,
+                        batch_size=2, mode=IF, K=3, solver=solver,
+                        candidate_seed=seed, n_requests=n, arrival="poisson",
+                        policy=policy)
+                    tags = {"suite": "nsfnet_gateway", "seed": seed,
+                            "cell": f"n{n}_{policy}"}
+                    specs.append(ScenarioSpec(
+                        **base, tags={**tags, "variant": "static"}))
+                    for w in windows:
+                        specs.append(ScenarioSpec(
+                            **base, gateway=True, batch_window_s=w,
+                            hold_model="exp", duration_s=hold_s, retry=True,
+                            tags={**tags, "variant": "gateway",
+                                  "window": w}))
+    return specs
+
+
 def random_load_scaling(quick: bool = False,
                         policies: tuple[str, ...] = ("fcfs", "latency-greedy")
                         ) -> list[ScenarioSpec]:
@@ -288,5 +329,6 @@ SUITES = {
     "nsfnet_pipeline": nsfnet_pipeline,
     "nsfnet_multirequest": nsfnet_multirequest,
     "nsfnet_churn": nsfnet_churn,
+    "nsfnet_gateway": nsfnet_gateway,
     "random_load_scaling": random_load_scaling,
 }

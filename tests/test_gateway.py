@@ -1,0 +1,329 @@
+"""ServeGateway: the long-running admission control plane (docs/gateway.md).
+
+Anchoring invariants: a gateway fed an entire fleet in one tick with an
+unbounded queue and no SLO reproduces the static admission round bit-for-bit;
+gateway traces replay-verify through the simulator's event verifier; the
+control-plane gates (backpressure, SLO) reject without ever touching the
+fabric; and the warm PlanCache dedupes identical shapes across ticks.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import IF, nsfnet, resnet101_profile
+from repro.serve import (GatewayConfig, PlanCache, ServeGateway, ServePlanner,
+                         ServeSim, ServedRequest, generate_fleet,
+                         replay_verify_sim)
+from repro.sweep import (SUITES, ScenarioSpec, churn_pairs, run_scenario,
+                         verify_result)
+
+NET = nsfnet()
+PROF = resnet101_profile()
+
+
+def _fleet(n=12, mode=IF, b=2, seed=0, **kw):
+    return generate_fleet(NET, n, "v4", "v13", b, mode, 3, seed=seed, **kw)
+
+
+def _static_fields(s: ServedRequest):
+    """The static-round fields of a served record (the gateway adds
+    admit/depart timestamps on top, like the simulator)."""
+    return (s.request, s.accepted, s.replanned, s.latency_s, s.plan, s.reason,
+            s.status)
+
+
+# ------------------------------------------------------------- config knobs
+def test_gateway_config_validation():
+    GatewayConfig()  # all defaults valid
+    GatewayConfig(batch_window_s=0.5, max_queue=4, slo_latency_s=1.0,
+                  retry=True)
+    with pytest.raises(ValueError):
+        GatewayConfig(batch_window_s=-0.1)
+    with pytest.raises(ValueError):
+        GatewayConfig(max_queue=0)
+    with pytest.raises(ValueError):
+        GatewayConfig(slo_latency_s=0.0)
+    with pytest.raises(ValueError):
+        ServeGateway(NET, PROF, policy="magic")
+
+
+# ------------------------------------------------------------ anchor parity
+@pytest.mark.parametrize("policy", ["fcfs", "latency-greedy", "batch-desc"])
+def test_single_tick_gateway_matches_static_round(policy):
+    """The tentpole anchor: entire fleet in one tick, unbounded queue, no
+    SLO, cold cache -> bit-for-bit the static ServePlanner.admit round."""
+    fleet = _fleet(16)
+    static = ServePlanner(NET, PROF).admit(fleet, policy=policy)
+    gw = ServeGateway(NET, PROF, policy=policy)
+    assert gw.submit(fleet) == len(fleet)
+    gw.tick()
+    out = gw.drain()
+    assert [_static_fields(s) for s in out.served] == \
+           [_static_fields(s) for s in static.served]
+    assert out.status == static.status
+    assert out.gateway_stats["n_ticks"] == 1
+    assert out.n_slo_rejected == 0 and out.n_queue_rejected == 0
+    assert replay_verify_sim(NET, PROF, out.served)
+
+
+def test_run_stream_with_infinite_holds_matches_static():
+    """Streamed one arrival per tick (window 0), infinite holds: same
+    decisions as the static round — the planner sees identical residuals."""
+    fleet = _fleet(12, arrival="poisson", seed=3)
+    static = ServePlanner(NET, PROF).admit(fleet, policy="fcfs")
+    out = ServeGateway(NET, PROF).run_stream(fleet)
+    assert [_static_fields(s) for s in out.served] == \
+           [_static_fields(s) for s in static.served]
+    for s in out.served:
+        if s.accepted:
+            assert s.admit_s == s.request.arrival_s
+
+
+# ----------------------------------------------------------- control plane
+def test_bounded_queue_backpressure_rejects_at_submit():
+    fleet = _fleet(6)
+    gw = ServeGateway(NET, PROF, config=GatewayConfig(max_queue=2))
+    assert gw.submit(fleet) == 2  # the rest bounce off the full queue
+    out_rows = [s for s in gw.core.served if s.reason == "queue-full"]
+    assert len(out_rows) == 4
+    gw.tick()
+    out = gw.drain()
+    assert out.n_queue_rejected == 4
+    assert out.gateway_stats["n_queue_rejected"] == 4
+    assert len(out.served) == len(fleet)  # every submission is accounted
+    # backpressure rejections never touched the fabric or the planner
+    assert all(s.plan is None and s.latency_s is None for s in out_rows)
+    assert replay_verify_sim(NET, PROF, out.served)
+
+
+def test_slo_gate_rejects_before_commit():
+    fleet = _fleet(8)
+    gw = ServeGateway(NET, PROF,
+                      config=GatewayConfig(slo_latency_s=1e-9))  # impossible
+    gw.submit(fleet)
+    gw.tick()
+    out = gw.drain()
+    assert out.n_accepted == 0
+    assert out.n_slo_rejected == len(fleet)
+    assert all(s.reason == "slo" for s in out.served)
+    # nothing was committed: the fabric is untouched
+    assert gw.core.concurrent == 0
+    assert replay_verify_sim(NET, PROF, out.served)
+    # a loose SLO admits exactly what the unconstrained gateway admits
+    loose = ServeGateway(NET, PROF, config=GatewayConfig(slo_latency_s=1e9))
+    loose.submit(fleet)
+    loose.tick()
+    assert loose.drain().n_accepted == \
+        ServePlanner(NET, PROF).admit(fleet).n_accepted
+
+
+def test_slo_respects_contended_latency():
+    """The SLO gate tests the *contended* latency (against live residuals),
+    so a threshold between the best and worst admitted latency splits the
+    fleet rather than rejecting everything."""
+    fleet = _fleet(16)
+    base = ServePlanner(NET, PROF).admit(fleet)
+    lats = sorted(s.latency_s for s in base.served if s.accepted)
+    assert len(lats) >= 2 and lats[0] < lats[-1]
+    cut = (lats[0] + lats[-1]) / 2
+    gw = ServeGateway(NET, PROF, config=GatewayConfig(slo_latency_s=cut))
+    gw.submit(fleet)
+    gw.tick()
+    out = gw.drain()
+    assert 0 < out.n_accepted
+    assert out.n_slo_rejected > 0
+    assert all(s.latency_s <= cut for s in out.served if s.accepted)
+
+
+# --------------------------------------------------------------- plan cache
+def test_plan_cache_dedupes_across_ticks():
+    fleet = _fleet(4)
+    gw = ServeGateway(NET, PROF)
+    gw.submit(fleet)
+    row1 = gw.tick()
+    assert row1["plan_cache_hits"] == 0  # cold cache: every shape is new
+    # same shapes, new identities, arriving later: all warm-cache hits
+    clones = [dataclasses.replace(r, request_id=100 + r.request_id,
+                                  arrival_s=1.0) for r in fleet]
+    gw.submit(clones)
+    row2 = gw.tick()
+    assert row2["plan_cache_misses"] == 0
+    assert row2["plan_cache_hits"] == len(clones)
+    out = gw.drain()
+    pc = out.gateway_stats["plan_cache"]
+    assert pc["hits"] == len(clones)
+    assert pc["hit_rate"] == pytest.approx(0.5)
+    # warm hits are the exact cached outcomes: the snapshot solve for a
+    # clone is the same object the cold round stored for its shape
+    for r, c in zip(fleet, clones):
+        assert gw.core.snapshot_for(c) is gw.core.snapshot_for(r)
+    assert replay_verify_sim(NET, PROF, out.served)
+
+
+def test_plan_cache_lru_and_counters():
+    cache = PlanCache(capacity=2)
+    assert cache.get("a") is None
+    cache.put("a", 1)
+    cache.put("b", 2)
+    assert cache.get("a") == 1  # refreshes a's recency
+    cache.put("c", 3)  # evicts b, the least recently used
+    assert "b" not in cache and "a" in cache and "c" in cache
+    assert cache.evictions == 1
+    s = cache.stats()
+    assert s["hits"] == 1 and s["misses"] == 1 and s["size"] == 2
+    assert s["hit_rate"] == pytest.approx(0.5)
+    cache.clear()
+    assert len(cache) == 0
+    assert cache.stats()["hits"] == 1  # counters survive a clear
+    with pytest.raises(ValueError):
+        PlanCache(capacity=0)
+
+
+# ------------------------------------------------------------ batch windows
+def test_batch_window_groups_arrivals_into_ticks():
+    fleet = _fleet(12, arrival="poisson", seed=3)
+    times = sorted({r.arrival_s for r in fleet})
+    per_arrival = ServeGateway(NET, PROF).run_stream(fleet)
+    assert per_arrival.gateway_stats["n_ticks"] == len(times)
+    one_shot = ServeGateway(
+        NET, PROF, config=GatewayConfig(batch_window_s=1e9)).run_stream(fleet)
+    assert one_shot.gateway_stats["n_ticks"] == 1
+    windowed = ServeGateway(
+        NET, PROF, config=GatewayConfig(batch_window_s=0.5)).run_stream(fleet)
+    assert 1 <= windowed.gateway_stats["n_ticks"] <= len(times)
+    for out in (per_arrival, one_shot, windowed):
+        assert len(out.served) == len(fleet)
+        assert replay_verify_sim(NET, PROF, out.served)
+
+
+def test_gateway_stats_rows_are_consistent():
+    fleet = _fleet(12, arrival="poisson", seed=3)
+    gw = ServeGateway(NET, PROF, config=GatewayConfig(batch_window_s=0.5))
+    out = gw.run_stream(fleet)
+    gs = out.gateway_stats
+    rows = gw.stats.ticks
+    assert gs["n_ticks"] == len(rows)
+    assert gs["n_submitted"] == len(fleet)
+    assert sum(r["n_arrivals"] for r in rows) == len(fleet)
+    assert sum(r["n_admitted"] for r in rows) == out.n_accepted
+    assert all(r["wall_s"] > 0 for r in rows)
+    pct = gs["tick_wall_pct"]
+    assert pct["p50"] <= pct["p95"] <= pct["p99"]
+    assert gs["admissions_per_s"] > 0
+    assert gs["tick_wall_total_s"] == pytest.approx(
+        sum(r["wall_s"] for r in rows))
+
+
+# ------------------------------------------------------------ churn + retry
+def test_gateway_churn_with_retry_matches_sim_semantics():
+    """Exp holds + retry through the per-arrival gateway (window 0): the
+    sim's drain-departures-then-retry rule at tick granularity.  Departures
+    *between* arrivals are released at the next tick rather than their own
+    instant, so traces are not bit-equal to ServeSim under churn — but the
+    trace replay-verifies, acceptance beats the static round when
+    overloaded, and on this pinned stream the admitted count agrees."""
+    fleet = _fleet(32, arrival="poisson", hold_model="exp", hold_time_s=4.0)
+    static = ServePlanner(NET, PROF).admit(fleet)
+    out = ServeGateway(NET, PROF,
+                       config=GatewayConfig(retry=True)).run_stream(fleet)
+    assert static.n_accepted < len(fleet)  # overloaded
+    assert out.n_accepted > static.n_accepted
+    assert out.n_departed > 0
+    assert out.n_retried > 0
+    assert replay_verify_sim(NET, PROF, out.served)
+    sim = ServeSim(NET, PROF, retry=True).run(fleet)
+    assert out.n_accepted == sim.n_accepted  # pinned: same stream, same count
+
+
+def test_gateway_lifecycle_guards():
+    gw = ServeGateway(NET, PROF)
+    gw.submit(_fleet(2))
+    gw.drain()
+    with pytest.raises(RuntimeError):
+        gw.submit(_fleet(1))
+    with pytest.raises(RuntimeError):
+        gw.tick()
+    with pytest.raises(RuntimeError):
+        gw.drain()
+
+
+# ------------------------------------------------------- sweep integration
+def test_gateway_scenario_spec_knobs_and_validation():
+    spec = ScenarioSpec(
+        topology="nsfnet", topology_kwargs={"source": "v4"},
+        profile="resnet101", source="v4", destination="v13",
+        batch_size=2, mode=IF, K=3, solver="bcd",
+        n_requests=8, arrival="poisson", policy="fcfs",
+        gateway=True, batch_window_s=0.5, hold_model="exp", duration_s=4.0,
+        retry=True)
+    clone = ScenarioSpec.from_dict(spec.to_dict())
+    assert clone == spec and clone.spec_hash() == spec.spec_hash()
+    # gateway knobs are solve-relevant (hash) but pair on churn_key
+    for patch in ({"gateway": False, "batch_window_s": 0.0,
+                   "hold_model": "none", "duration_s": None, "retry": False},
+                  {"batch_window_s": 1.0}, {"max_queue": 4},
+                  {"slo_latency_s": 1.0}):
+        other = ScenarioSpec.from_dict({**spec.to_dict(), **patch})
+        assert other.spec_hash() != spec.spec_hash()
+        assert other.churn_key() == spec.churn_key()
+    base = dict(topology="nsfnet", profile="resnet101", source="v4",
+                destination="v13", batch_size=2, mode=IF, K=3, n_requests=8)
+    with pytest.raises(ValueError):  # sim and gateway are exclusive
+        ScenarioSpec(**base, sim=True, gateway=True)
+    with pytest.raises(ValueError):  # gateway knob without the gateway
+        ScenarioSpec(**base, batch_window_s=0.5)
+    with pytest.raises(ValueError):
+        ScenarioSpec(**base, max_queue=4)
+    with pytest.raises(ValueError):
+        ScenarioSpec(**base, slo_latency_s=1.0)
+    with pytest.raises(ValueError):  # gateway needs a fleet
+        ScenarioSpec(**{**base, "n_requests": 1}, gateway=True)
+    with pytest.raises(ValueError):  # bad knob values
+        ScenarioSpec(**base, gateway=True, batch_window_s=-1.0)
+    with pytest.raises(ValueError):
+        ScenarioSpec(**base, gateway=True, max_queue=0)
+    # retry/hold_model are legal with gateway (not only sim)
+    ScenarioSpec(**base, gateway=True, retry=True, hold_model="exp",
+                 duration_s=4.0)
+
+
+def test_gateway_scenario_runs_and_verifies():
+    spec = ScenarioSpec(
+        topology="nsfnet", topology_kwargs={"source": "v4"},
+        profile="resnet101", source="v4", destination="v13",
+        batch_size=2, mode=IF, K=3, solver="bcd",
+        n_requests=12, arrival="poisson", policy="fcfs",
+        gateway=True, hold_model="exp", duration_s=4.0, retry=True,
+        tags={"suite": "test"})
+    result = run_scenario(spec, use_context_cache=False)
+    assert result.feasible
+    assert result.gateway is not None and result.gateway["n_ticks"] >= 1
+    assert result.eval_cache_hit_rate is not None
+    assert result.plan_cache_hit_rate is not None
+    assert result.blocking_probability is not None
+    assert len(result.served) == 12
+    assert verify_result(result)
+    # corrupting the trace must fail verification
+    bad = run_scenario(spec, use_context_cache=False)
+    for d in bad.served:
+        if d["accepted"] and d.get("depart_s") is not None:
+            d["depart_s"] = d["admit_s"] - 1.0
+            break
+    assert not verify_result(bad)
+
+
+def test_nsfnet_gateway_suite_pairs_and_uplifts():
+    specs = SUITES["nsfnet_gateway"](quick=True)
+    assert any(s.gateway for s in specs) and any(not s.gateway for s in specs)
+    # run one cell (static + its gateway variants) to keep the test quick
+    cell = [s for s in specs if s.tags["cell"] == "n16_fcfs"]
+    results = [run_scenario(s) for s in cell]
+    assert all(r.error is None for r in results)
+    pairs = churn_pairs(results)
+    assert len(pairs) == sum(1 for s in cell if s.gateway)
+    assert all(p["driver"] == "gateway" for p in pairs.values())
+    static = next(r for r in results if not r.spec.gateway)
+    if static.acceptance_ratio < 1.0:  # overloaded cell: departures help
+        assert any(p["uplift"] > 0 for p in pairs.values())
+    for r in results:
+        assert verify_result(r)

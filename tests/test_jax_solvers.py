@@ -285,3 +285,45 @@ def test_deprecated_shims_bit_for_bit():
     out = solve(p, "bcd")
     assert res.plan == out.plan
     assert res.latency == out.latency
+
+
+# -------------------------------------------------- min_batch dispatch gate
+def test_min_batch_threshold_routes_tiny_batches_to_scalar_loop():
+    """Below ``min_batch`` unique instances, solve_batch skips the padded
+    vectorized kernel (whose fixed overhead loses to the scalar loop at the
+    measured crossover, BENCH_solver.json) — with identical outcomes either
+    side of the threshold, so dispatch is purely a performance decision."""
+    import dataclasses
+
+    from repro.core import engine as eng
+
+    problems = [_problem(seed=0), _problem(seed=1)]
+    calls = {"batch": 0}
+    info = eng.get_solver("dfts_jax")
+    orig = info.batch_fn
+
+    def counting_batch_fn(unique, *, cache=None, **kw):
+        calls["batch"] += 1
+        return orig(unique, cache=cache, **kw)
+
+    eng._REGISTRY["dfts_jax"] = dataclasses.replace(
+        info, batch_fn=counting_batch_fn)
+    try:
+        # 2 unique < default threshold (4): the scalar loop handles it
+        assert eng.SOLVE_BATCH_MIN_BATCH == 4
+        via_loop = solve_batch(problems, "dfts_jax", dedup=False)
+        assert calls["batch"] == 0
+        # forcing min_batch=1 routes the same set through the batch kernel
+        via_kernel = solve_batch(problems, "dfts_jax", dedup=False,
+                                 min_batch=1)
+        assert calls["batch"] == 1
+        # and a high threshold forces the loop even for big-enough batches
+        solve_batch(problems * 3, "dfts_jax", dedup=False, min_batch=100)
+        assert calls["batch"] == 1
+    finally:
+        eng._REGISTRY["dfts_jax"] = info
+    for a, b in zip(via_loop, via_kernel):
+        assert a.feasible == b.feasible
+        assert a.plan == b.plan
+        assert a.latency == b.latency  # bit-identical either side
+        assert a.status == b.status

@@ -297,3 +297,51 @@ def test_multirequest_suite_smoke():
     assert acc_exact >= acc_bcd - 1e-12
     for r in results:
         assert verify_result(r)
+
+
+# ---------------------------------------------- cache observability (issue 7)
+def test_eval_cache_counts_hits_and_misses():
+    cache = EvalCache()
+    assert cache.hits == 0 and cache.misses == 0
+    assert cache.hit_rate is None  # no traffic yet
+    r = _fleet(1)[0]
+    ev = PlanEvaluator(NET, PROF, r.chain_request(), cache=cache)
+    ev.segment_comp_s("v7", 1, 10)
+    assert (cache.hits, cache.misses) == (0, 1)
+    ev.segment_comp_s("v7", 1, 10)  # memoized
+    assert (cache.hits, cache.misses) == (1, 1)
+    ev.segment_fits("v13", 1, 10)
+    ev.segment_fits("v13", 1, 10)
+    assert (cache.hits, cache.misses) == (2, 2)
+    s = cache.stats()
+    assert s["hits"] == 2 and s["misses"] == 2
+    assert s["hit_rate"] == pytest.approx(0.5)
+    assert s["n_comp"] == 1 and s["n_fits"] == 1
+    # a fork shares the comp table but counts its own traffic
+    fork = cache.fork_fits()
+    PlanEvaluator(NET, PROF, r.chain_request(),
+                  cache=fork).segment_comp_s("v7", 1, 10)
+    assert (fork.hits, fork.misses) == (1, 0)  # warm comp entry, fresh counters
+    assert (cache.hits, cache.misses) == (2, 2)  # parent untouched
+
+
+def test_solver_stats_surface_cache_counters():
+    fleet = _fleet(8)
+    planner = ServePlanner(NET, PROF)
+    out = planner.admit(fleet)
+    stats = out.solver_stats()
+    ec = stats["cache"]["eval_cache"]
+    assert ec["hits"] > 0 and ec["misses"] > 0
+    assert 0.0 < ec["hit_rate"] < 1.0
+    assert "plan_cache" not in stats["cache"]  # none attached by default
+    # with a PlanCache attached, its hit rate flows through solver_stats too
+    from repro.serve import PlanCache
+
+    pc = PlanCache()
+    warm = ServePlanner(NET, PROF, plan_cache=pc)
+    first = warm.admit(fleet)
+    assert first.solver_stats()["cache"]["plan_cache"]["misses"] > 0
+    again = warm.admit(fleet)  # identical shapes: every presolve is a hit
+    pstats = again.solver_stats()["cache"]["plan_cache"]
+    assert pstats["hits"] >= len({r.solve_key(NET, PROF) for r in fleet})
+    assert pstats["hit_rate"] > 0.0

@@ -277,3 +277,56 @@ def test_nsfnet_churn_suite_shows_uplift():
     assert report["churn_comparison"]["mean_uplift"] > 0
     for r in results:
         assert verify_result(r)
+
+
+# --------------------------------------------------- epoch bucketing edge cases
+def test_epoch_percentiles_admit_exactly_at_t0():
+    """admit_s == 0.0 is a legitimate t=0 admission, not a missing timestamp
+    — it must bucket into epoch 0, while a record with admit_s=None (imported
+    from a static round) falls back to its arrival instant."""
+    import dataclasses
+
+    fleet = _fleet(2)
+    at_zero = ServedRequest(fleet[0], True, latency_s=1.0, admit_s=0.0,
+                            depart_s=5.0)
+    static_import = ServedRequest(
+        dataclasses.replace(fleet[1], arrival_s=7.5), True, latency_s=2.0,
+        admit_s=None)
+    from repro.serve import SimOutcome
+
+    sim = SimOutcome(policy="fcfs", solver="bcd",
+                     served=[at_zero, static_import], horizon_s=10.0)
+    epochs = sim.epoch_percentiles(n_epochs=4)
+    assert [e["n"] for e in epochs] == [1, 0, 0, 1]
+    assert epochs[0]["p50"] == pytest.approx(1.0)
+    assert epochs[3]["p50"] == pytest.approx(2.0)
+    assert sum(e["n"] for e in epochs) == sim.n_accepted
+
+
+# ---------------------------------------------- simultaneous departure ordering
+def test_simultaneous_departures_drain_before_retry():
+    """A batch fleet with one fixed holding time departs in synchronized
+    waves: every chain admitted at t=0 leaves at exactly T, so instant T has
+    many simultaneous departures.  The retry queue must be re-attempted only
+    after *all* of them drain — pinned by the wave invariant: a chain
+    admitted at k*T failed exactly once per earlier wave (n_retries == k).
+    Retrying between individual releases would re-attempt queued requests
+    against a partially freed fabric and inflate their retry counts."""
+    T = 2.0
+    fleet = _fleet(16, hold_model="fixed", hold_time_s=T)
+    sim = ServeSim(NET, PROF, retry=True).run(fleet)
+    assert sim.n_retried > 0  # the fleet overloads the fabric at t=0
+    waves = {}
+    for s in sim.served:
+        if s.accepted:
+            k = round(s.admit_s / T)
+            assert s.admit_s == pytest.approx(k * T)
+            assert s.n_retries == k
+            waves.setdefault(k, []).append(s.request.request_id)
+    assert len(waves) >= 2  # at least one synchronized-departure retry wave
+    # within a wave, the queue is drained in (arrival_s, request_id) order —
+    # all arrivals are 0 here, so decision order is increasing request id
+    for k, ids in waves.items():
+        if k > 0:
+            assert ids == sorted(ids)
+    assert replay_verify_sim(NET, PROF, sim.served)
