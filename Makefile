@@ -12,10 +12,11 @@ verify: test sweep-quick bench-solver-smoke bench-serve-smoke
 ## verify-fast: the core dev loop (<40s) — deselects the multi-minute
 ## jax-stack tests (pytest -m slow: shard_map subprocess runs, kernel
 ## sweeps, dry-runs) and runs quick serving sweeps: one static admission
-## round and one event-driven churn suite (exercises the ServeSim loop)
+## round, one event-driven churn suite (exercises the ServeSim loop), and
+## one failure-injection suite (exercises migration + trace replay)
 verify-fast: test-fast
 	$(PYTHON) -m repro.sweep --suite nsfnet_multirequest nsfnet_churn \
-		--quick --out sweep_out
+		nsfnet_failures --quick --out sweep_out
 
 ## test: tier-1 test suite (ROADMAP.md)
 test:

@@ -20,6 +20,7 @@ REQUIRED_DOCUMENTED = (
     "src/repro/core/jax_solvers.py",
     "src/repro/kernels/minplus.py",
     "src/repro/serve/gateway.py",
+    "src/repro/serve/failures.py",
 )
 
 

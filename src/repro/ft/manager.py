@@ -1,12 +1,22 @@
 """Fault tolerance & elasticity: checkpoint/restart, node-failure re-planning,
 straggler mitigation — the paper's planner as the recovery mechanism.
 
-On a node failure the controller (1) drops the node from the planner topology,
-(2) re-solves splitting/placement/chaining with BCD (tens of ms — Fig. 10's
-headline), (3) restores the last checkpoint and re-jits the step for the new
-plan.  Straggler mitigation follows the paper's kappa_i calibration: per-node
-step times are re-fit by OLS (kappa(b, phi) = (alpha b + beta) phi, Sec. VI-A2)
+On a node failure the controller routes through the serve stack's failure
+machinery (docs/failures.md): the node is marked down in a
+:class:`~repro.serve.ResidualState` (capacity exactly zero, incident links
+gone), the hosted chain is detected through the residual reverse index,
+released, and re-planned against the *degraded* fabric with BCD (tens of
+ms — Fig. 10's headline); the caller then restores the last checkpoint and
+re-jits the step for the new plan.  No candidate stripping is needed — a
+down node is unreachable in the degraded network, so the solver avoids it
+by construction, and a later `recover` can bring it back.
+
+Straggler mitigation follows the paper's kappa_i calibration: per-node step
+times are re-fit by OLS (kappa(b, phi) = (alpha b + beta) phi, Sec. VI-A2)
 and the planner re-runs when the refreshed model predicts a better chain.
+A compute-model swap changes the planner's instance identity (content
+hashes), so the straggler path rebuilds the admission core from scratch and
+re-applies any standing failures.
 
 At 1000+ nodes the same machinery applies per pod-group: the planner graph is
 the pod-level topology (DESIGN.md Sec. 2.2), so re-planning cost is O(groups),
@@ -20,9 +30,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..core import ComputeModel, PhysicalNetwork, ProblemInstance, solve
+from ..core import ComputeModel, Plan, PhysicalNetwork
 from ..core.costmodel import ModelProfile
 from ..core.plan import ServiceChainRequest
+from ..serve import AdmissionCore, FailureEvent, ServePlanner, ServeRequest
 
 
 @dataclass
@@ -55,8 +66,24 @@ class FTEvent:
     detail: str
 
 
+@dataclass
+class _PlanResult:
+    """The controller's current plan + its predicted latency (the shape the
+    demo and callers consumed from the legacy SolveResult)."""
+
+    plan: Plan
+    latency_s: float
+    feasible: bool = True
+
+
 class ElasticPlanController:
-    """Holds the current plan; re-plans on failures/stragglers."""
+    """Holds the current plan; re-plans on failures/stragglers.
+
+    Internally this is a one-chain :class:`~repro.serve.AdmissionCore`: the
+    training chain is admitted onto the fabric's residual state, node
+    failures are :class:`~repro.serve.FailureEvent` marks whose victim
+    migration *is* the re-plan, and `recover_node` restores capacity.
+    """
 
     def __init__(self, net: PhysicalNetwork, profile: ModelProfile,
                  request: ServiceChainRequest, K: int,
@@ -68,29 +95,72 @@ class ElasticPlanController:
         self.candidates = [list(c) for c in candidates]
         self.calibrator = StepTimeCalibrator()
         self.events: list[FTEvent] = []
-        self.result = self._solve()
-        if not self.result.feasible:
+        self.down_nodes: list[str] = []  # standing failures, survive rebuilds
+        self._core: AdmissionCore | None = None
+        rec = self._rebuild_core()
+        if rec is None:
             raise ValueError("initial plan infeasible")
+        self.result = _PlanResult(rec.plan, rec.latency_s)
 
-    def _solve(self):
-        return solve(ProblemInstance(self.net, self.profile, self.request,
-                                     self.K, tuple(tuple(c) for c in
-                                                   self.candidates)),
-                     solver="bcd")
+    def _serve_request(self) -> ServeRequest:
+        r = self.request
+        return ServeRequest(
+            request_id=0, source=r.source, destination=r.destination,
+            batch_size=r.batch_size, mode=r.mode, K=self.K,
+            candidates=tuple(tuple(c) for c in self.candidates),
+            model_id=r.model_id, schedule=r.schedule,
+            n_microbatches=r.n_microbatches)
+
+    def _rebuild_core(self):
+        """Fresh planner + admission core over the *current* ``self.net``
+        (compute models included), with standing node failures re-applied
+        before the chain is admitted.  Returns the accepted record or None."""
+        planner = ServePlanner(self.net, self.profile, solver="bcd")
+        serve_req = self._serve_request()
+        presolved, keys, _ = planner.presolve([serve_req])
+        core = AdmissionCore(planner, presolved, keys)
+        for node in self.down_nodes:
+            core.state.fail_node(node)
+        self._core = core
+        return core.try_admit(serve_req)
 
     @property
     def plan(self):
         return self.result.plan
 
     def fail_node(self, node: str, step: int = -1):
-        """Drop a failed node everywhere and re-plan (elastic scaling down)."""
-        self.candidates = [[n for n in c if n != node] or c
-                           for c in self.candidates]
-        for c in self.candidates:
-            if not c:
-                raise ValueError("no candidates left for a stage")
+        """Mark `node` down and live-migrate the chain off it (elastic
+        scaling down).  The degraded fabric — not a stripped candidate
+        list — is what makes the solver avoid the dead node."""
+        if node not in self.net.nodes:
+            raise ValueError(f"unknown node {node!r}")
         self.events.append(FTEvent(step, "failure", node))
-        return self._replan(step, f"after losing {node}")
+        self.down_nodes.append(node)
+        t0 = time.perf_counter()
+        victims = self._core.apply_failure(
+            FailureEvent(t_s=float(max(step, 0)), kind="node_down",
+                         node=node))
+        if not victims:
+            # the dead node hosted nothing: the current plan survives
+            self.events.append(FTEvent(
+                step, "replan", f"after losing {node}: plan unchanged"))
+            return self.plan
+        rec = victims[0]
+        if rec.failed_s is not None:  # no feasible placement remains
+            raise ValueError(f"re-plan infeasible (after losing {node})")
+        return self._adopt(rec, step, f"after losing {node}", t0)
+
+    def recover_node(self, node: str, step: int = -1):
+        """Bring a previously failed node back (capacity restored); the
+        current plan is kept — the next failure/straggler re-plan may use
+        the node again."""
+        if node not in self.down_nodes:
+            raise ValueError(f"{node!r} is not down")
+        self.down_nodes.remove(node)
+        self._core.apply_failure(
+            FailureEvent(t_s=float(max(step, 0)), kind="recover", node=node))
+        self.events.append(FTEvent(step, "restore", node))
+        return self.plan
 
     def observe_step(self, step: int, node: str, batch: int, flops: float,
                      seconds: float, slowdown_threshold: float = 1.5):
@@ -110,19 +180,19 @@ class ElasticPlanController:
                 self.net.clear_routing_cache()
                 self.events.append(FTEvent(step, "straggler",
                                            f"{node} {seconds/predicted:.1f}x"))
-                return self._replan(step, f"straggler {node}")
+                t0 = time.perf_counter()
+                rec = self._rebuild_core()
+                if rec is None:
+                    raise ValueError(f"re-plan infeasible (straggler {node})")
+                return self._adopt(rec, step, f"straggler {node}", t0)
         return None
 
-    def _replan(self, step: int, why: str):
-        t0 = time.perf_counter()
-        res = self._solve()
-        if not res.feasible:
-            raise ValueError(f"re-plan infeasible ({why})")
-        changed = res.plan.placement != self.result.plan.placement or \
-            res.plan.segments != self.result.plan.segments
-        self.result = res
+    def _adopt(self, rec, step: int, why: str, t0: float):
+        changed = rec.plan.placement != self.result.plan.placement or \
+            rec.plan.segments != self.result.plan.segments
+        self.result = _PlanResult(rec.plan, rec.latency_s)
         self.events.append(FTEvent(
             step, "replan",
-            f"{why}: {res.plan.placement} segs={res.plan.segments} "
+            f"{why}: {rec.plan.placement} segs={rec.plan.segments} "
             f"in {(time.perf_counter()-t0)*1e3:.1f}ms changed={changed}"))
-        return res.plan
+        return rec.plan

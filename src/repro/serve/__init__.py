@@ -12,13 +12,20 @@ chains arrive, hold their reservation for ``duration_s``, and depart —
 releasing their exact demand back to the fabric, with an optional retry
 queue for capacity-blocked requests.  See docs/sim.md.
 
+Substrate failures (`link_down`/`node_down`/`recover` events) take committed
+chains down mid-flight; victims are detected through the ResidualState
+reverse index and live-migrated onto the degraded fabric, with HA standby
+preplanning and a migration cost model.  See docs/failures.md.
+
 CLI:  ``PYTHONPATH=src python -m repro.serve --n-requests 16 --policy fcfs``
       ``PYTHONPATH=src python -m repro.serve --sim --hold-model exp \\
-          --duration-s 4 --arrival poisson --retry``
+          --duration-s 4 --arrival poisson --retry --failure-rate 0.2``
 """
 from repro.core import SOLVERS  # legacy re-export; use repro.core.solve(...)
 
 from .admission import AdmissionCore, ServedRequest
+from .failures import (FAILURE_KINDS, FailureEvent, MigrationCostModel,
+                       generate_failures, migration_delta, standby_network)
 from .gateway import (GatewayConfig, GatewayOutcome, GatewayStats,
                       ServeGateway)
 from .plancache import PlanCache
@@ -26,14 +33,19 @@ from .planner import ServeOutcome, ServePlanner, replay_verify
 from .policies import POLICIES, POLICY_NAMES
 from .requests import (ARRIVALS, BATCH_SPREAD, HOLD_MODELS, ServeRequest,
                        generate_fleet)
-from .residual import PlanDemand, ResidualState, effective_rate_rps, plan_demand
-from .sim import ServeSim, SimOutcome, replay_verify_sim
+from .residual import (PlanDemand, ResidualState, effective_rate_rps,
+                       plan_demand, plan_footprint)
+from .sim import (FailureOutcome, ServeSim, SimOutcome, replay_verify_sim,
+                  replay_verify_sim_report)
 
 __all__ = [
-    "ARRIVALS", "BATCH_SPREAD", "HOLD_MODELS", "POLICIES", "POLICY_NAMES",
-    "SOLVERS", "AdmissionCore", "GatewayConfig", "GatewayOutcome",
-    "GatewayStats", "PlanCache", "PlanDemand", "ResidualState",
+    "ARRIVALS", "BATCH_SPREAD", "FAILURE_KINDS", "HOLD_MODELS", "POLICIES",
+    "POLICY_NAMES", "SOLVERS", "AdmissionCore", "FailureEvent",
+    "FailureOutcome", "GatewayConfig", "GatewayOutcome", "GatewayStats",
+    "MigrationCostModel", "PlanCache", "PlanDemand", "ResidualState",
     "ServeGateway", "ServeOutcome", "ServePlanner", "ServeRequest",
     "ServeSim", "ServedRequest", "SimOutcome", "effective_rate_rps",
-    "generate_fleet", "plan_demand", "replay_verify", "replay_verify_sim",
+    "generate_failures", "generate_fleet", "migration_delta", "plan_demand",
+    "plan_footprint", "replay_verify", "replay_verify_sim",
+    "replay_verify_sim_report", "standby_network",
 ]

@@ -19,6 +19,7 @@ import sys
 
 from repro.core import solver_names, solver_supports
 
+from .failures import generate_failures
 from .gateway import GatewayConfig, ServeGateway
 from .planner import ServePlanner
 from .policies import POLICY_NAMES
@@ -78,6 +79,15 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--slo-latency-s", type=float, default=None,
                     help="--gateway: reject chains whose planned latency "
                          "exceeds this SLO (before committing capacity)")
+    ap.add_argument("--failure-rate", type=float, default=0.0,
+                    help="--sim/--gateway: substrate failure events per "
+                         "second (docs/failures.md); 0 = no failures")
+    ap.add_argument("--failure-downtime-s", type=float, default=None,
+                    help="mean downtime before a failed resource recovers "
+                         "(default: resources stay down)")
+    ap.add_argument("--ha", action="store_true",
+                    help="--sim/--gateway: pre-plan a disjoint standby for "
+                         "every chain, promoted on failure")
     ap.add_argument("--json", default=None, help="write summary + records here")
     args = ap.parse_args(argv)
     if args.sim and args.gateway:
@@ -95,6 +105,12 @@ def main(argv: list[str] | None = None) -> int:
          or args.slo_latency_s is not None) and not args.gateway):
         ap.error("--batch-window-s/--max-queue/--slo-latency-s only apply "
                  "with --gateway")
+    if ((args.failure_rate != 0.0 or args.failure_downtime_s is not None
+         or args.ha) and not (args.sim or args.gateway)):
+        ap.error("--failure-rate/--failure-downtime-s/--ha only apply with "
+                 "--sim or --gateway")
+    if args.failure_rate < 0:
+        ap.error("--failure-rate must be >= 0")
     # No batch_size: the fleet's batch spread means some requests may pipeline
     # deeper than the base batch clamps, so check the unclamped depth.
     ok, reason = solver_supports(args.solver, schedule=args.schedule,
@@ -116,11 +132,20 @@ def main(argv: list[str] | None = None) -> int:
         schedule=args.schedule, n_microbatches=args.n_microbatches,
         hold_model=args.hold_model,
         hold_time_s=(args.duration_s if args.duration_s is not None
-                     else float("inf")))
+                     else float("inf")),
+        ha=args.ha)
+    failures = None
+    if args.failure_rate > 0:
+        horizon = (max(r.arrival_s for r in fleet)
+                   + (args.duration_s if args.duration_s is not None else 10.0))
+        failures = generate_failures(
+            net, rate_per_s=args.failure_rate, horizon_s=horizon,
+            seed=args.seed, mean_downtime_s=args.failure_downtime_s,
+            protect=(args.source, args.destination))
     if args.sim:
         sim = ServeSim(net, profile, solver=args.solver,
                        replan=not args.no_replan, retry=args.retry)
-        outcome = sim.run(fleet, policy=args.policy)
+        outcome = sim.run(fleet, policy=args.policy, failures=failures)
     elif args.gateway:
         gw = ServeGateway(
             net, profile, solver=args.solver, replan=not args.no_replan,
@@ -129,7 +154,7 @@ def main(argv: list[str] | None = None) -> int:
                                  max_queue=args.max_queue,
                                  slo_latency_s=args.slo_latency_s,
                                  retry=args.retry))
-        outcome = gw.run_stream(fleet)
+        outcome = gw.run_stream(fleet, failures=failures)
     else:
         planner = ServePlanner(net, profile, solver=args.solver,
                                replan=not args.no_replan)
@@ -166,6 +191,14 @@ def main(argv: list[str] | None = None) -> int:
               f"peak {outcome.peak_concurrent} concurrent, "
               f"{outcome.n_retried} admitted via retry, "
               f"blocking {outcome.blocking_probability:.2f}", file=sys.stderr)
+    if failures is not None:
+        fs = outcome.failure_summary()
+        p95 = fs["restore_p95_s"]
+        p95s = "-" if p95 is None else f"{p95:.3f}s"
+        print(f"# failures: {len(failures)} events, "
+              f"{fs['n_failed']} chains hit, {fs['n_restored']} restored, "
+              f"{fs['n_killed']} killed, restore p95 {p95s}, "
+              f"moved {fs['moved_bytes'] / 1e6:.1f} MB", file=sys.stderr)
     if args.gateway:
         gs = outcome.gateway_stats
         pc = gs.get("plan_cache", {})

@@ -47,11 +47,14 @@ import numpy as np
 from repro.core import EvalCache, ModelProfile, PhysicalNetwork
 
 from .admission import AdmissionCore, ServedRequest
+from .failures import FailureEvent, MigrationCostModel
 from .plancache import PlanCache
 from .planner import ServePlanner
 from .policies import POLICIES
 from .requests import ServeRequest
 from .sim import _DEPART, SimOutcome
+
+_INF = float("inf")
 
 
 @dataclass(frozen=True)
@@ -131,6 +134,7 @@ class GatewayOutcome(SimOutcome):
     """
 
     gateway_stats: dict = field(default_factory=dict)
+    failures: list = field(default_factory=list)  # injected FailureEvents
 
     @property
     def n_slo_rejected(self) -> int:
@@ -167,7 +171,8 @@ class ServeGateway:
                  config: GatewayConfig | None = None,
                  cache: EvalCache | None = None,
                  plan_cache: PlanCache | None = None,
-                 solver_kwargs: dict | None = None):
+                 solver_kwargs: dict | None = None,
+                 cost_model: MigrationCostModel | None = None):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {sorted(POLICIES)}")
         self.config = config if config is not None else GatewayConfig()
@@ -178,15 +183,29 @@ class ServeGateway:
             solver_kwargs=solver_kwargs)
         self.core = AdmissionCore(
             self.planner, {}, {}, retry=self.config.retry,
-            slo_latency_s=self.config.slo_latency_s, record_events=True)
+            slo_latency_s=self.config.slo_latency_s, record_events=True,
+            cost_model=cost_model)
         self.stats = GatewayStats()
         self.queue: list[ServeRequest] = []  # submitted, awaiting a tick
         self.estimates: dict[int, float] = {}  # solo latencies (policy input)
         self._departures: list[tuple] = []  # (depart_s, prio, seq, record)
         self._seq = itertools.count()  # deterministic heap tie-break
+        self._failures: list[FailureEvent] = []  # injected, time-ordered
+        self._fail_i = 0  # next failure event not yet applied
         self.now = 0.0  # stream time of the last tick
         self._t0 = time.perf_counter()
         self._drained = False
+
+    def inject_failures(self, events: list[FailureEvent]) -> None:
+        """Register a substrate failure schedule (docs/failures.md): events
+        are applied in timestamp order as stream time advances past them —
+        interleaved with due departures, failures after the departures of
+        their instant.  Must be called before the events' timestamps pass."""
+        if self._drained:
+            raise RuntimeError("gateway already drained")
+        self._failures = sorted(self._failures[self._fail_i:] + list(events),
+                                key=lambda e: e.t_s)
+        self._fail_i = 0
 
     # ----------------------------------------------------------- control plane
     def submit(self, requests: list[ServeRequest] | ServeRequest) -> int:
@@ -212,17 +231,40 @@ class ServeGateway:
         return accepted
 
     def _release_due(self, now: float) -> int:
-        """Release every committed chain whose departure is due, in timestamp
-        order, then re-attempt the retry queue once against the fully freed
-        residuals (the sim's drain-departures-first rule, tick-grained)."""
+        """Advance substrate time to `now`: process every due departure and
+        injected failure event in timestamp order (departures before the
+        failures of their instant, same-instant failures as one batch), then
+        re-attempt parked victims and the retry queue once against the
+        settled residuals (the sim's drain-departures-first rule,
+        tick-grained)."""
         released = 0
-        while self._departures and self._departures[0][0] <= now:
-            t, _, _, rec = heapq.heappop(self._departures)
-            self.core.release(rec, t)
-            released += 1
-        if released and self.config.retry and self.core.pending:
-            for rec in self.core.drain_pending(now):
-                self._push_depart(rec)
+        changed = False
+        while True:
+            t_dep = self._departures[0][0] if self._departures else _INF
+            t_fail = (self._failures[self._fail_i].t_s
+                      if self._fail_i < len(self._failures) else _INF)
+            t = min(t_dep, t_fail)
+            if t > now:
+                break
+            if t_dep <= t_fail:
+                _, _, _, rec = heapq.heappop(self._departures)
+                if self.core.depart(rec, t_dep):
+                    released += 1
+            else:
+                j = self._fail_i
+                while (j < len(self._failures)
+                       and self._failures[j].t_s == t_fail):
+                    j += 1
+                self.core.apply_failures(self._failures[self._fail_i:j],
+                                         t_fail)
+                self._fail_i = j
+                changed = True
+        if (released or changed) and self.config.retry:
+            if self.core.fail_parked:
+                self.core.drain_failed(now)  # keep scheduled departures
+            if self.core.pending:  # kills free capacity too, not just departs
+                for rec in self.core.drain_pending(now):
+                    self._push_depart(rec)
         return released
 
     def _push_depart(self, rec: ServedRequest) -> None:
@@ -287,12 +329,15 @@ class ServeGateway:
         if self.queue:
             self.tick()
         horizon = self.now
-        while self._departures:
-            t = self._departures[0][0]
-            if horizon_s is not None and t > horizon_s:
+        while True:
+            t_dep = self._departures[0][0] if self._departures else _INF
+            t_fail = (self._failures[self._fail_i].t_s
+                      if self._fail_i < len(self._failures) else _INF)
+            t = min(t_dep, t_fail)
+            if t == _INF or (horizon_s is not None and t > horizon_s):
                 break
             horizon = max(horizon, t)
-            # release one instant at a time so retries see the same
+            # advance one instant at a time so retries see the same
             # all-departures-at-this-instant residuals as the simulator
             self._release_due(t)
         self.core.reject_pending(horizon)
@@ -308,14 +353,20 @@ class ServeGateway:
             n_presolved=len(self.core.presolved),
             cache_stats=self.planner.round_cache_stats(),
             retry=self.config.retry, horizon_s=horizon,
-            timeline=self.core.timeline, gateway_stats=stats)
+            timeline=self.core.timeline, gateway_stats=stats,
+            failures=list(self._failures))
 
     # -------------------------------------------------------------- stream API
-    def run_stream(self, requests: list[ServeRequest]) -> GatewayOutcome:
+    def run_stream(self, requests: list[ServeRequest],
+                   failures: list[FailureEvent] | None = None
+                   ) -> GatewayOutcome:
         """Drive a whole fleet through the gateway: arrivals are grouped into
         ``batch_window_s`` windows (window start = first arrival in it), each
         window is submitted and ticked at its last arrival's timestamp, and
-        the stream is drained at the end."""
+        the stream is drained at the end.  ``failures`` injects a substrate
+        failure schedule applied as stream time passes each event."""
+        if failures:
+            self.inject_failures(failures)
         reqs = sorted(requests, key=lambda r: (r.arrival_s, r.request_id))
         i = 0
         while i < len(reqs):

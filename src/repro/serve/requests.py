@@ -39,6 +39,9 @@ class ServeRequest:
     # behaviour; the event-driven ServeSim releases the chain's exact demand
     # at arrival_s (admit time) + duration_s.
     duration_s: float = INF
+    # High-availability flag (docs/failures.md): admission also pre-plans a
+    # placement/path-disjoint standby for this chain, promoted on failure.
+    ha: bool = False
 
     def __post_init__(self) -> None:
         assert self.mode in (IF, TR)
@@ -104,6 +107,7 @@ def generate_fleet(
     n_microbatches: int = 1,
     hold_model: str = "none",
     hold_time_s: float = INF,
+    ha: bool = False,
 ) -> list[ServeRequest]:
     """Deterministic seeded fleet of `n_requests` chains on one fabric.
 
@@ -156,5 +160,6 @@ def generate_fleet(
             schedule=schedule,
             n_microbatches=n_microbatches,
             duration_s=duration,
+            ha=ha,
         ))
     return fleet

@@ -46,6 +46,21 @@ def _fits_cap(used: float, cap: float) -> bool:
     return used <= cap + _EPS_ABS + _EPS_REL * abs(cap)
 
 
+def plan_footprint(plan: Plan) -> tuple[set[tuple[str, str]], set[str]]:
+    """Every resource a committed plan depends on: the directed links of all
+    its subpaths (including the zero-demand tail) and the nodes it places
+    sub-models on *or* routes through.  This is the failure-domain of the
+    plan — losing any of these kills the chain — which is deliberately wider
+    than its :class:`PlanDemand` (a tail subpath reserves no bandwidth but
+    still dies with its links)."""
+    links: set[tuple[str, str]] = set()
+    nodes: set[str] = set(plan.placement)
+    for path in list(plan.paths) + [plan.tail_path]:
+        nodes.update(path)
+        links.update(zip(path, path[1:]))
+    return links, nodes
+
+
 @dataclass(frozen=True)
 class PlanDemand:
     """The capacity footprint of one accepted chain."""
@@ -143,6 +158,30 @@ class ResidualState:
         default_factory=lambda: defaultdict(int), repr=False, compare=False)
     _cnt_disk: dict[str, int] = field(
         default_factory=lambda: defaultdict(int), repr=False, compare=False)
+    # Failure state (docs/failures.md): resources currently down.  A down
+    # link is absent from every materialized view (capacity exactly zero); a
+    # down node keeps routability metadata but loses its memory/disk *and*
+    # every incident link, so nothing can be placed on it or routed through
+    # it.  Both directions of an undirected failure are recorded.
+    down_nodes: set[str] = field(default_factory=set)
+    down_links: set[tuple[str, str]] = field(default_factory=set)
+    # Reverse index resource -> {request_id: multiplicity}: which committed
+    # chains' footprints touch each directed link / node, in commit order
+    # (dict insertion order).  Lets a failure event find its victims in
+    # O(affected) instead of scanning every committed chain.
+    _hosted_links: dict[tuple[str, str], dict[int, int]] = field(
+        default_factory=dict, repr=False, compare=False)
+    _hosted_nodes: dict[str, dict[int, int]] = field(
+        default_factory=dict, repr=False, compare=False)
+    # request_id -> monotone commit sequence number, so victim sets gathered
+    # from several resources can be ordered by commit time in O(n log n)
+    _commit_seq: dict[int, int] = field(
+        default_factory=dict, repr=False, compare=False)
+    _seq_counter: int = field(default=0, repr=False, compare=False)
+    # id(plan) -> (plan, links, nodes): memoized plan_footprint, identity-
+    # checked like _demand_memo
+    _footprint_memo: dict = field(default_factory=dict, repr=False,
+                                  compare=False)
     # (request demand identity, id(plan)) -> (plan, profile, PlanDemand).
     # One admission computes the same demand three times (fits, commit,
     # eventually release) and a streaming gateway sees the same few
@@ -175,9 +214,35 @@ class ResidualState:
         self._demand_memo[key] = (plan, profile, d)
         return d
 
+    def _footprint(self, plan: Plan) -> tuple[set[tuple[str, str]], set[str]]:
+        """Memoized :func:`plan_footprint` (identity-checked, like
+        :meth:`_demand`)."""
+        hit = self._footprint_memo.get(id(plan))
+        if hit is not None and hit[0] is plan:
+            return hit[1], hit[2]
+        links, nodes = plan_footprint(plan)
+        self._footprint_memo[id(plan)] = (plan, links, nodes)
+        return links, nodes
+
+    def footprint_clear(self, plan: Plan) -> bool:
+        """Does `plan` avoid every down resource?  A down link or node has
+        exactly zero capacity — any plan whose footprint touches one cannot
+        be committed, including zero-demand tail subpaths."""
+        if not (self.down_nodes or self.down_links):
+            return True
+        links, nodes = self._footprint(plan)
+        if self.down_nodes and not self.down_nodes.isdisjoint(nodes):
+            return False
+        if self.down_links and not self.down_links.isdisjoint(links):
+            return False
+        return True
+
     def fits(self, profile: ModelProfile, request: ServeRequest,
              plan: Plan) -> bool:
-        """Would committing `plan` keep every link/node within capacity?"""
+        """Would committing `plan` keep every link/node within capacity?
+        Down resources have zero capacity: any plan touching one never fits."""
+        if not self.footprint_clear(plan):
+            return False
         d = self._demand(profile, request, plan)
         for (u, v), f in d.link_fw_bps.items():
             spec = self.base.links[(u, v)]
@@ -196,8 +261,44 @@ class ResidualState:
                 return False
         return True
 
+    def _index_commit(self, request: ServeRequest, plan: Plan) -> None:
+        rid = request.request_id
+        links, nodes = self._footprint(plan)
+        for link in links:
+            hosted = self._hosted_links.setdefault(link, {})
+            hosted[rid] = hosted.get(rid, 0) + 1
+        for node in nodes:
+            hosted = self._hosted_nodes.setdefault(node, {})
+            hosted[rid] = hosted.get(rid, 0) + 1
+        self._seq_counter += 1
+        cnt, seq = self._commit_seq.get(rid, (0, self._seq_counter))
+        self._commit_seq[rid] = (cnt + 1, seq)
+
+    def _index_release(self, request: ServeRequest, plan: Plan) -> None:
+        rid = request.request_id
+        links, nodes = self._footprint(plan)
+        for key, index in ((links, self._hosted_links),
+                           (nodes, self._hosted_nodes)):
+            for k in key:
+                hosted = index[k]
+                hosted[rid] -= 1
+                if hosted[rid] <= 0:
+                    del hosted[rid]
+                if not hosted:
+                    del index[k]
+        cnt, seq = self._commit_seq[rid]
+        if cnt <= 1:
+            del self._commit_seq[rid]
+        else:
+            self._commit_seq[rid] = (cnt - 1, seq)
+
     def commit(self, profile: ModelProfile, request: ServeRequest,
                plan: Plan) -> None:
+        if not self.footprint_clear(plan):
+            raise ValueError(
+                f"commit of chain request_id={request.request_id} touches a "
+                f"down resource (down_nodes={sorted(self.down_nodes)}, "
+                f"down_links={sorted(self.down_links)})")
         d = self._demand(profile, request, plan)
         for k, f in d.link_fw_bps.items():
             self.used_link_fw[k] += f
@@ -212,6 +313,7 @@ class ResidualState:
             self.used_disk[n] += s
             self._cnt_disk[n] += 1
         self.committed.append((request, plan))
+        self._index_commit(request, plan)
         self._update_live(d)
 
     def release(self, profile: ModelProfile, request: ServeRequest,
@@ -237,6 +339,7 @@ class ResidualState:
         else:
             raise KeyError(f"release of uncommitted chain "
                            f"request_id={request.request_id}")
+        self._index_release(request, plan)
         d = self._demand(profile, request, plan)
         for tally, cnt, demand in (
                 (self.used_link_fw, self._cnt_link_fw, d.link_fw_bps),
@@ -254,6 +357,73 @@ class ResidualState:
                 if abs(tally[k]) <= _EPS_ABS:
                     del tally[k]
         self._update_live(d)
+
+    # --------------------------------------------------------------- failures
+    def _order_victims(self, ids: set[int]) -> list[int]:
+        """Victim request ids in commit order (oldest chain first)."""
+        return sorted(ids, key=lambda rid: self._commit_seq[rid][1])
+
+    def chains_on_link(self, u: str, v: str) -> list[int]:
+        """Committed chains whose footprint crosses link (u, v) in either
+        direction, in commit order — O(affected) via the reverse index."""
+        ids: set[int] = set()
+        ids.update(self._hosted_links.get((u, v), ()))
+        ids.update(self._hosted_links.get((v, u), ()))
+        return self._order_victims(ids)
+
+    def chains_on_node(self, node: str) -> list[int]:
+        """Committed chains hosted on / routed through `node` or crossing any
+        of its incident links, in commit order.  A dead node takes its links
+        with it, so transit chains are victims too."""
+        ids: set[int] = set(self._hosted_nodes.get(node, ()))
+        for (u, v), hosted in self._hosted_links.items():
+            if u == node or v == node:
+                ids.update(hosted)
+        return self._order_victims(ids)
+
+    def fail_link(self, u: str, v: str) -> list[int]:
+        """Mark the undirected link {u, v} down; returns the affected chain
+        ids (commit order).  The caller (the migration engine) must release
+        every victim — this method only flips the capacity state."""
+        victims = self.chains_on_link(u, v)
+        self.down_links.add((u, v))
+        self.down_links.add((v, u))
+        self._live = None  # full rebuild: the live view loses the link
+        return victims
+
+    def fail_node(self, node: str) -> list[int]:
+        """Mark `node` down (memory/disk and every incident link gone);
+        returns the affected chain ids (commit order)."""
+        victims = self.chains_on_node(node)
+        self.down_nodes.add(node)
+        self._live = None
+        return victims
+
+    def recover_link(self, u: str, v: str) -> None:
+        self.down_links.discard((u, v))
+        self.down_links.discard((v, u))
+        self._live = None  # full rebuild: the live view regains the link
+
+    def recover_node(self, node: str) -> None:
+        self.down_nodes.discard(node)
+        self._live = None
+
+    def _link_down(self, u: str, v: str) -> bool:
+        return (u in self.down_nodes or v in self.down_nodes
+                or (u, v) in self.down_links)
+
+    def down_ok(self) -> bool:
+        """No committed chain's footprint touches a down resource — the
+        invariant the replay verifier asserts after every instant with
+        failure events (a down resource has exactly zero capacity, so any
+        surviving tenancy would be an accounting bug)."""
+        for link in self.down_links:
+            if self._hosted_links.get(link):
+                return False
+        for node in self.down_nodes:
+            if self.chains_on_node(node):
+                return False
+        return True
 
     # ---------------------------------------------------------- materialization
     def materialize(self, mode: str | None = None,
@@ -276,11 +446,19 @@ class ResidualState:
         """
         out = PhysicalNetwork()
         for name, spec in self.base.nodes.items():
+            if name in self.down_nodes:
+                # a down node stays in the topology (solvers index candidate
+                # nodes by name) but with zero hosting capacity; its links
+                # are dropped below, so nothing can route through it either
+                out.add_node(NodeSpec(name, spec.compute, 0.0, 0.0))
+                continue
             out.add_node(NodeSpec(
                 name, spec.compute,
                 max(0.0, spec.mem_capacity - self.used_mem[name]),
                 max(0.0, spec.disk_capacity - self.used_disk[name])))
         for (u, v), spec in self.base.links.items():
+            if self._link_down(u, v):
+                continue  # down = capacity exactly zero, even keep_saturated
             fw = spec.bw_fw - self.used_link_fw[(u, v)]
             bw = spec.bw_bw - self.used_link_bw[(u, v)]
             if not keep_saturated:
@@ -313,6 +491,8 @@ class ResidualState:
         if live is None:
             return
         for (u, v) in set(d.link_fw_bps) | set(d.link_bw_bps):
+            if self._link_down(u, v):
+                continue  # a victim release must not resurrect a down link
             spec = self.base.links[(u, v)]
             fw = spec.bw_fw - self.used_link_fw[(u, v)]
             bw = spec.bw_bw - self.used_link_bw[(u, v)]
@@ -320,6 +500,8 @@ class ResidualState:
                                           max(bw, _MIN_RATE_BPS),
                                           spec.delay_fw, spec.delay_bw)
         for name in set(d.node_mem_bytes) | set(d.node_disk_bytes):
+            if name in self.down_nodes:
+                continue  # rebuilt with zero capacity on the next full view
             spec = self.base.nodes[name]
             live.nodes[name] = NodeSpec(
                 name, spec.compute,
@@ -331,7 +513,23 @@ class ResidualState:
     # ----------------------------------------------------------- verification
     def conservation_ok(self, profile: ModelProfile) -> bool:
         """Recompute usage from the committed plans and confirm (a) it matches
-        the running tallies and (b) nothing exceeds base capacity."""
+        the running tallies, (b) nothing exceeds base capacity, and (c) the
+        resource -> hosting-chains reverse index matches a fresh re-derivation
+        (it is what failure events trust to find their victims)."""
+        want_links: dict[tuple[str, str], dict[int, int]] = {}
+        want_nodes: dict[str, dict[int, int]] = {}
+        for request, plan in self.committed:
+            links, nodes = self._footprint(plan)
+            rid = request.request_id
+            for link in links:
+                hosted = want_links.setdefault(link, {})
+                hosted[rid] = hosted.get(rid, 0) + 1
+            for node in nodes:
+                hosted = want_nodes.setdefault(node, {})
+                hosted[rid] = hosted.get(rid, 0) + 1
+        if (want_links != self._hosted_links
+                or want_nodes != self._hosted_nodes):
+            return False
         fw: dict[tuple[str, str], float] = defaultdict(float)
         bwd: dict[tuple[str, str], float] = defaultdict(float)
         mem: dict[str, float] = defaultdict(float)

@@ -35,6 +35,9 @@ CSV_FIELDS = [
     "gateway", "batch_window_s", "max_queue", "slo_latency_s",
     # cache observability (serve scenarios): hit rates over the run
     "eval_cache_hit_rate", "plan_cache_hit_rate",
+    # substrate failures + live migration (docs/failures.md); empty otherwise
+    "failure_rate", "ha", "n_failed", "n_restored", "restore_p95_s",
+    "moved_bytes",
 ]
 
 
@@ -122,6 +125,13 @@ def write_artifacts(out_dir: str | Path, suite_name: str,
                 "slo_latency_s": _opt(s.slo_latency_s if s.gateway else None),
                 "eval_cache_hit_rate": _opt(r.eval_cache_hit_rate),
                 "plan_cache_hit_rate": _opt(r.plan_cache_hit_rate),
+                "failure_rate": _opt(s.failure_rate if (s.sim or s.gateway)
+                                     else None),
+                "ha": s.ha if (s.sim or s.gateway) else "",
+                "n_failed": _opt(r.n_failed),
+                "n_restored": _opt(r.n_restored),
+                "restore_p95_s": _opt(r.restore_p95_s),
+                "moved_bytes": _opt(r.moved_bytes),
             })
     return {"json": json_path, "csv": csv_path}
 

@@ -103,6 +103,40 @@ def churn_pairs(results: list[ScenarioResult]) -> dict[str, dict]:
     return pairs
 
 
+def failure_rows(results: list[ScenarioResult]) -> list[dict]:
+    """One survivability row per failure-injected scenario (docs/failures.md):
+    how many committed chains a substrate event took down, how many came back
+    (migrated or promoted standbys), the restoration-latency tail, and the
+    bytes the migrations moved.  Rate-0 anchors are excluded — they carry no
+    failure schedule and pair through :func:`churn_pairs` instead."""
+    rows = []
+    for r in results:
+        s = r.spec
+        if not (s.sim or s.gateway) or r.error is not None:
+            continue
+        if s.failure_rate <= 0 and s.failures is None:
+            continue
+        n_failed = r.n_failed or 0
+        n_restored = r.n_restored or 0
+        rows.append({
+            "scenario_id": s.scenario_id(),
+            "cell": s.tags.get("cell", ""),
+            "variant": s.tags.get("variant", ""),
+            "failure_rate": s.failure_rate,
+            "ha": s.ha,
+            "solver": s.solver,
+            "n_requests": s.n_requests,
+            "acceptance_ratio": r.acceptance_ratio,
+            "n_failed": n_failed,
+            "n_restored": n_restored,
+            "n_killed": n_failed - n_restored,
+            "survivability": (n_restored / n_failed) if n_failed else None,
+            "restore_p95_s": r.restore_p95_s,
+            "moved_bytes": r.moved_bytes,
+        })
+    return rows
+
+
 def _pareto(points: list[tuple[str, float, float]]) -> set[str]:
     front = set()
     for name, lat, wall in points:
@@ -242,9 +276,27 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
             "max_uplift": max(up),
             "pairs": cpairs,
         }
+    frows = failure_rows(results)
+    failure_cmp = None
+    if frows:
+        n_failed = sum(row["n_failed"] for row in frows)
+        n_restored = sum(row["n_restored"] for row in frows)
+        p95s = [row["restore_p95_s"] for row in frows
+                if row["restore_p95_s"] is not None]
+        failure_cmp = {
+            "n_scenarios": len(frows),
+            "n_failed": n_failed,
+            "n_restored": n_restored,
+            "n_killed": n_failed - n_restored,
+            "survivability": (n_restored / n_failed) if n_failed else None,
+            "worst_restore_p95_s": max(p95s) if p95s else None,
+            "moved_bytes": sum(row["moved_bytes"] or 0.0 for row in frows),
+            "rows": frows,
+        }
     return {"n_groups": len(per_group), "summary": summary,
             "schedule_comparison": schedule_cmp,
-            "churn_comparison": churn_cmp, "groups": per_group}
+            "churn_comparison": churn_cmp,
+            "failure_survivability": failure_cmp, "groups": per_group}
 
 
 def format_report(report: dict) -> str:
@@ -290,4 +342,25 @@ def format_report(report: dict) -> str:
                 f"{p['churn_accepted']}/{p['n_requests']} "
                 f"(uplift {p['uplift']:+.2f}, peak {p['peak_concurrent']} "
                 f"concurrent)")
+    fc = report.get("failure_survivability")
+    if fc:
+        surv = ("-" if fc["survivability"] is None
+                else f"{fc['survivability']:.2f}")
+        p95 = ("-" if fc["worst_restore_p95_s"] is None
+               else f"{fc['worst_restore_p95_s']:.2f}s")
+        lines.append(
+            f"failures: {fc['n_scenarios']} scenarios, "
+            f"{fc['n_failed']} chains hit, {fc['n_restored']} restored, "
+            f"{fc['n_killed']} killed (survivability {surv}), worst restore "
+            f"p95 {p95}, moved {fc['moved_bytes'] / 1e6:.1f} MB")
+        for row in sorted(fc["rows"],
+                          key=lambda x: (x["cell"], x["variant"])):
+            sv = ("-" if row["survivability"] is None
+                  else f"{row['survivability']:.2f}")
+            lines.append(
+                f"  {row['cell']:<16} {row['variant']:<10} "
+                f"rate {row['failure_rate']:<5} "
+                f"{'ha ' if row['ha'] else '   '}"
+                f"hit {row['n_failed']:>2} restored {row['n_restored']:>2} "
+                f"killed {row['n_killed']:>2} (surv {sv})")
     return "\n".join(lines)

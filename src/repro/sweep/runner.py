@@ -75,6 +75,12 @@ class ScenarioResult:
     plan_cache_hit_rate: float | None = None
     # gateway scenarios (spec.gateway): GatewayOutcome.gateway_stats summary
     gateway: dict | None = None
+    # failure scenarios (spec.failure_rate / spec.failures, docs/failures.md):
+    # survivability metrics from FailureOutcome.failure_summary()
+    n_failed: int | None = None
+    n_restored: int | None = None
+    restore_p95_s: float | None = None
+    moved_bytes: float | None = None
 
     def to_dict(self) -> dict:
         d = asdict(self)
@@ -136,10 +142,13 @@ def _run_serve_scenario(spec: ScenarioSpec, net, profile, cache) -> ScenarioResu
                              ServeSim)
 
     fleet = spec.build_fleet(net)
+    # failure_rate == 0 and no explicit schedule -> failures is None, so the
+    # failure-free drivers are bit-for-bit the pre-failure code path
+    failures = spec.build_failures(net, fleet) or None
     if spec.sim:
         runner = ServeSim(net, profile, solver=spec.solver, cache=cache,
                           retry=spec.retry, solver_kwargs=spec.solver_kwargs)
-        outcome = runner.run(fleet, policy=spec.policy)
+        outcome = runner.run(fleet, policy=spec.policy, failures=failures)
     elif spec.gateway:
         gw = ServeGateway(
             net, profile, solver=spec.solver, policy=spec.policy,
@@ -148,7 +157,7 @@ def _run_serve_scenario(spec: ScenarioSpec, net, profile, cache) -> ScenarioResu
                                  slo_latency_s=spec.slo_latency_s,
                                  retry=spec.retry),
             cache=cache, solver_kwargs=spec.solver_kwargs)
-        outcome = gw.run_stream(fleet)
+        outcome = gw.run_stream(fleet, failures=failures)
     else:
         planner = ServePlanner(net, profile, solver=spec.solver, cache=cache,
                                solver_kwargs=spec.solver_kwargs)
@@ -176,6 +185,12 @@ def _run_serve_scenario(spec: ScenarioSpec, net, profile, cache) -> ScenarioResu
         res.peak_concurrent = outcome.peak_concurrent
         res.n_retried = outcome.n_retried
         res.sim = outcome.sim_summary()
+        if failures is not None:
+            fs = outcome.failure_summary()
+            res.n_failed = fs["n_failed"]
+            res.n_restored = fs["n_restored"]
+            res.restore_p95_s = fs["restore_p95_s"]
+            res.moved_bytes = fs["moved_bytes"]
     if spec.gateway:
         res.gateway = outcome.gateway_stats
     return res
@@ -267,7 +282,10 @@ def verify_result(result: ScenarioResult, atol: float = 1e-9) -> bool:
             if abs((n_blocked / len(served))
                    - (result.blocking_probability or 0.0)) > atol:
                 return False
-            return replay_verify_sim(net, profile, served)
+            # the failure schedule is deterministic from the spec, so the
+            # verifier replays the exact marks the run was produced under
+            failures = spec.build_failures(net, spec.build_fleet(net)) or None
+            return replay_verify_sim(net, profile, served, failures=failures)
         return replay_verify(net, profile, served)
     if not result.feasible:
         return True

@@ -34,11 +34,12 @@ from repro.core import (
 from repro.serve.policies import POLICY_NAMES
 from repro.serve.requests import ARRIVALS, HOLD_MODELS
 
-# v6: serving gateway (gateway/batch_window_s/max_queue/slo_latency_s knobs,
-# cache hit-rate columns); v5: event-driven serving sim (sim/hold_model/
-# duration_s/retry knobs, churn metrics + error capture in results); v4:
-# engine dispatch (status + stats)
-SUITE_SCHEMA_VERSION = 6
+# v7: failure events + live migration (failure_rate/failure_downtime_s/
+# failures/ha knobs, survivability columns); v6: serving gateway (gateway/
+# batch_window_s/max_queue/slo_latency_s knobs, cache hit-rate columns); v5:
+# event-driven serving sim (sim/hold_model/duration_s/retry knobs, churn
+# metrics + error capture in results); v4: engine dispatch (status + stats)
+SUITE_SCHEMA_VERSION = 7
 
 # ------------------------------------------------------------------ topologies
 TOPOLOGIES = {
@@ -152,6 +153,16 @@ class ScenarioSpec:
     batch_window_s: float = 0.0  # arrival grouping window per admission tick
     max_queue: int | None = None  # bounded admission queue (None: unbounded)
     slo_latency_s: float | None = None  # reject plans slower than this SLO
+    # Substrate failures + live migration (repro.serve.failures,
+    # docs/failures.md): failure_rate > 0 injects a seeded link_down/node_down
+    # schedule into the sim/gateway run; failure_downtime_s adds paired
+    # recover events; `failures` pins an explicit [t_s, kind, target] schedule
+    # instead (target: node name, or [u, v] for a link); ha=True pre-plans a
+    # disjoint standby per chain, promoted on failure.
+    failure_rate: float = 0.0  # substrate failure events per second
+    failure_downtime_s: float | None = None  # mean downtime (None: stay down)
+    failures: list | None = None  # explicit schedule, overrides failure_rate
+    ha: bool = False
     name: str = ""  # optional human label; not part of the content hash
     tags: dict = field(default_factory=dict)  # free-form grouping metadata
 
@@ -209,6 +220,31 @@ class ScenarioSpec:
                              "hold_model in ('fixed', 'exp')")
         if self.retry and not (self.sim or self.gateway):
             raise ValueError("retry requires sim=True or gateway=True")
+        if self.failure_rate < 0:
+            raise ValueError("failure_rate must be >= 0")
+        if (self.failure_downtime_s is not None
+                and not self.failure_downtime_s > 0):
+            raise ValueError("failure_downtime_s must be > 0 (or None)")
+        has_failures = (self.failure_rate > 0 or self.failures is not None
+                        or self.ha)
+        if has_failures and not (self.sim or self.gateway):
+            raise ValueError("failure_rate / failures / ha require sim=True "
+                             "or gateway=True (failures act on the live "
+                             "event timeline)")
+        if self.failure_downtime_s is not None and not has_failures:
+            raise ValueError("failure_downtime_s is only meaningful with "
+                             "failure_rate > 0 or an explicit failures list")
+        if self.failures is not None:
+            norm = []
+            for entry in self.failures:
+                if len(entry) != 3:
+                    raise ValueError(f"each failures entry must be "
+                                     f"[t_s, kind, target], got {entry!r}")
+                t_s, kind, target = entry
+                norm.append([float(t_s), kind,
+                             list(target) if isinstance(target, (list, tuple))
+                             else target])
+            self.failures = norm
         self.drop_links = [list(p) for p in self.drop_links]
         if self.candidates is not None:
             self.candidates = [list(c) for c in self.candidates]
@@ -263,7 +299,8 @@ class ScenarioSpec:
         acceptance-uplift pairing uses."""
         d = self.to_dict()
         for f in ("name", "tags", "sim", "hold_model", "duration_s", "retry",
-                  "gateway", "batch_window_s", "max_queue", "slo_latency_s"):
+                  "gateway", "batch_window_s", "max_queue", "slo_latency_s",
+                  "failure_rate", "failure_downtime_s", "failures", "ha"):
             d.pop(f, None)
         return json.dumps(d, sort_keys=True, separators=(",", ":"))
 
@@ -322,4 +359,33 @@ class ScenarioSpec:
             n_microbatches=self.n_microbatches,
             hold_model=self.hold_model,
             hold_time_s=(self.duration_s if self.duration_s is not None
-                         else float("inf")))
+                         else float("inf")),
+            ha=self.ha)
+
+    def build_failures(self, net: PhysicalNetwork, fleet) -> list:
+        """The scenario's substrate-failure schedule (docs/failures.md):
+        the explicit ``failures`` list when pinned, else a seeded schedule
+        from ``failure_rate`` over the fleet's active horizon.  Deterministic
+        from the spec alone, so ``verify_result`` can rebuild the exact
+        schedule a result was produced under."""
+        from repro.serve.failures import FailureEvent, generate_failures
+
+        if self.failures is not None:
+            events = []
+            for t_s, kind, target in self.failures:
+                if isinstance(target, (list, tuple)):
+                    events.append(FailureEvent(t_s, kind,
+                                               link=tuple(target)))
+                else:
+                    events.append(FailureEvent(t_s, kind, node=target))
+            return sorted(events, key=lambda e: e.t_s)
+        if self.failure_rate <= 0:
+            return []
+        horizon = (max(r.arrival_s for r in fleet)
+                   + (self.duration_s if self.duration_s is not None
+                      else 10.0))
+        return generate_failures(
+            net, rate_per_s=self.failure_rate, horizon_s=horizon,
+            seed=self.candidate_seed,
+            mean_downtime_s=self.failure_downtime_s,
+            protect=(self.source, self.destination))

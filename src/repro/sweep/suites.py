@@ -255,6 +255,55 @@ def nsfnet_churn(quick: bool = False,
     return specs
 
 
+def nsfnet_failures(quick: bool = False,
+                    policies: tuple[str, ...] = ("fcfs",),
+                    schemes: tuple[str, ...] = ("bcd",),
+                    hold_s: float = 6.0,
+                    failure_rates: tuple[float, ...] | None = None
+                    ) -> list[ScenarioSpec]:
+    """Survivability under substrate failures (docs/failures.md): every cell
+    is one Poisson churn fleet admitted at several failure rates — the
+    ``rate 0`` anchor is bit-for-bit the plain churn run (``failures`` stays
+    None, so the failure-free code path is exercised, not just skipped) —
+    plus an HA variant at the highest rate, where each chain pre-plans a
+    disjoint standby promoted on failure.  Failed resources recover after
+    Exponential(mean ``2 * hold_s``) downtime, so the curves show both the
+    migration transient and the post-recovery steady state; the report's
+    ``failure_survivability`` section and the CSV's ``n_failed`` /
+    ``n_restored`` / ``restore_p95_s`` / ``moved_bytes`` columns come from
+    this suite."""
+    if failure_rates is None:
+        failure_rates = (0.0, 0.2) if quick else (0.0, 0.1, 0.2, 0.4)
+    fleets = [16] if quick else [16, 32, 64]
+    seeds = 1 if quick else 3
+    specs = []
+    for n in fleets:
+        for policy in policies:
+            for solver in schemes:
+                for seed in range(seeds):
+                    base = dict(
+                        topology="nsfnet", topology_kwargs={"source": SOURCE},
+                        profile="resnet101", source=SOURCE, destination=DEST,
+                        batch_size=2, mode=IF, K=3, solver=solver,
+                        candidate_seed=seed, n_requests=n, arrival="poisson",
+                        policy=policy, sim=True, hold_model="exp",
+                        duration_s=hold_s, retry=True)
+                    tags = {"suite": "nsfnet_failures", "seed": seed,
+                            "cell": f"n{n}_{policy}"}
+                    for rate in failure_rates:
+                        specs.append(ScenarioSpec(
+                            **base, failure_rate=rate,
+                            failure_downtime_s=(2 * hold_s if rate else None),
+                            tags={**tags, "variant": f"rate{rate}",
+                                  "failure_rate": rate}))
+                    specs.append(ScenarioSpec(
+                        **base, failure_rate=failure_rates[-1],
+                        failure_downtime_s=2 * hold_s, ha=True,
+                        tags={**tags, "variant": "ha",
+                              "failure_rate": failure_rates[-1]}))
+    return specs
+
+
 def nsfnet_gateway(quick: bool = False,
                    policies: tuple[str, ...] = ("fcfs",),
                    schemes: tuple[str, ...] = ("bcd",),
@@ -329,6 +378,7 @@ SUITES = {
     "nsfnet_pipeline": nsfnet_pipeline,
     "nsfnet_multirequest": nsfnet_multirequest,
     "nsfnet_churn": nsfnet_churn,
+    "nsfnet_failures": nsfnet_failures,
     "nsfnet_gateway": nsfnet_gateway,
     "random_load_scaling": random_load_scaling,
 }

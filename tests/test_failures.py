@@ -1,0 +1,185 @@
+"""Deterministic failure-injection regression tier (docs/failures.md).
+
+Pinned seeded scenarios on nsfnet/resnet101 — a single link down, the
+source (articulation) node down, a same-instant failure burst, and a
+fail-then-recover outage — with bit-for-bit expected survivor sets,
+kill sets, and restoration latencies.  A behaviour drift in victim
+detection, migration, the retry/park queues, or the cost model moves one
+of these pins and fails loudly here.
+
+Also anchors the zero-failure contract: with ``failures=None`` the
+simulator returns a plain :class:`SimOutcome` bit-for-bit identical to a
+run that never heard of failures, and ``failures=[]`` only *adds* the
+failure keys to the summary without perturbing any shared one.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core import IF, nsfnet, resnet101_profile
+from repro.serve import (FailureEvent, FailureOutcome, ServeSim, SimOutcome,
+                         generate_failures, generate_fleet,
+                         replay_verify_sim)
+
+NET = nsfnet()
+PROF = resnet101_profile()
+
+
+def _fleet(n=12, seed=1):
+    return generate_fleet(NET, n, "v4", "v13", 2, IF, 3, seed=seed,
+                          arrival="poisson", hold_model="exp",
+                          hold_time_s=8.0)
+
+
+def _run(failures):
+    out = ServeSim(NET, PROF, retry=True).run(_fleet(), failures=failures)
+    assert replay_verify_sim(NET, PROF, out.served, failures=out.failures)
+    return out
+
+
+def _pins(out):
+    acc = [s for s in out.served if s.accepted]
+    return {
+        "accepted": sorted(s.request.request_id for s in acc),
+        "survivors": sorted(s.request.request_id for s in acc
+                            if s.failed_s is None),
+        "killed": sorted(s.request.request_id for s in acc
+                         if s.failed_s is not None),
+        "restored": sorted(s.request.request_id for s in acc
+                           if s.migrations),
+        "restore_latency_s": {
+            s.request.request_id: round(sum(m["disruption_s"]
+                                            for m in s.migrations), 6)
+            for s in acc if s.migrations},
+    }
+
+
+# ---------------------------------------------------------- pinned scenarios
+def test_single_link_down():
+    """One busy link fails: both hosted chains migrate at the failure
+    instant; one replans to a disjoint path in place (zero restage), the
+    other relocates a stage and pays the parameter reload."""
+    out = _run([FailureEvent(t_s=4.0, kind="link_down", link=("v11", "v14"))])
+    assert _pins(out) == {
+        "accepted": list(range(12)),
+        "survivors": list(range(12)),
+        "killed": [],
+        "restored": [0, 2],
+        "restore_latency_s": {0: 0.0, 2: 21.466636},
+    }
+    assert (out.n_failed, out.n_restored, out.n_killed) == (2, 2, 0)
+    assert out.restored_fraction == 1.0
+    assert round(out.moved_bytes) == 2683329512
+
+
+def test_articulation_node_down():
+    """The source node fails: every chain terminates or originates there,
+    so no replan exists — all live chains are killed and every later
+    arrival is rejected against the degraded substrate."""
+    out = _run([FailureEvent(t_s=4.0, kind="node_down", node="v4")])
+    assert _pins(out) == {
+        "accepted": [0, 1, 2],
+        "survivors": [],
+        "killed": [0, 1, 2],
+        "restored": [],
+        "restore_latency_s": {},
+    }
+    assert (out.n_failed, out.n_restored, out.n_killed) == (3, 0, 3)
+    assert out.restored_fraction == 0.0
+
+
+def test_failure_burst_same_instant():
+    """Two links and a node fail in the same instant: the victims are
+    detected once against the union outage and every chain relocates,
+    paying the full restage cost."""
+    out = _run([
+        FailureEvent(t_s=4.0, kind="link_down", link=("v11", "v14")),
+        FailureEvent(t_s=4.0, kind="link_down", link=("v13", "v14")),
+        FailureEvent(t_s=4.0, kind="node_down", node="v9"),
+    ])
+    assert _pins(out) == {
+        "accepted": list(range(12)),
+        "survivors": list(range(12)),
+        "killed": [],
+        "restored": [0, 1, 2],
+        "restore_latency_s": {0: 21.273964, 1: 21.338188, 2: 21.466636},
+    }
+    assert (out.n_failed, out.n_restored, out.n_killed) == (3, 3, 0)
+    assert round(out.moved_bytes) == 8009848536
+
+
+def test_fail_then_recover():
+    """The source goes down for a 3 s outage and comes back: parked victims
+    are restored at the recovery instant with exactly the outage as their
+    disruption (same plan, nothing moved); one victim's residual hold
+    expires during the outage and is killed, not restored."""
+    out = _run([FailureEvent(t_s=4.0, kind="node_down", node="v4"),
+                FailureEvent(t_s=7.0, kind="recover", node="v4")])
+    assert _pins(out) == {
+        "accepted": list(range(12)),
+        "survivors": [0] + list(range(2, 12)),
+        "killed": [1],
+        "restored": [0, 2],
+        "restore_latency_s": {0: 3.0, 2: 3.0},
+    }
+    assert (out.n_failed, out.n_restored, out.n_killed) == (3, 2, 1)
+    assert out.moved_bytes == 0.0  # restored on their original plans
+    assert out.restore_latencies() == [3.0, 3.0]
+
+
+# --------------------------------------------------------- zero-failure parity
+def test_no_failures_is_bitwise_identical():
+    """failures=None must be byte-for-byte the failure-free simulator —
+    same outcome type, same summary, same per-record serialization."""
+    plain = ServeSim(NET, PROF, retry=True).run(_fleet())
+    with_none = ServeSim(NET, PROF, retry=True).run(_fleet(), failures=None)
+    assert type(plain) is SimOutcome and type(with_none) is SimOutcome
+    assert not isinstance(with_none, FailureOutcome)
+    a, b = plain.sim_summary(), with_none.sim_summary()
+    for d in (a, b):
+        d.pop("wall_time_s", None)
+    assert a == b
+    assert [s.to_dict() for s in plain.served] == \
+           [s.to_dict() for s in with_none.served]
+
+
+def test_empty_failure_schedule_only_adds_keys():
+    plain = ServeSim(NET, PROF, retry=True).run(_fleet())
+    empty = ServeSim(NET, PROF, retry=True).run(_fleet(), failures=[])
+    assert isinstance(empty, FailureOutcome)
+    a, b = plain.sim_summary(), empty.sim_summary()
+    for d in (a, b):
+        d.pop("wall_time_s", None)
+    extra = set(b) - set(a)
+    assert extra == {"failures", "failure_events"}
+    assert {k: b[k] for k in a} == a
+    assert b["failure_events"] == []
+    assert empty.n_failed == 0 and empty.n_killed == 0
+
+
+# ------------------------------------------------------- schedule generation
+def test_generate_failures_is_deterministic_and_protects():
+    evs1 = generate_failures(NET, rate_per_s=0.3, horizon_s=20.0, seed=7,
+                             protect=("v4", "v13"))
+    evs2 = generate_failures(NET, rate_per_s=0.3, horizon_s=20.0, seed=7,
+                             protect=("v4", "v13"))
+    assert [e.to_dict() for e in evs1] == [e.to_dict() for e in evs2]
+    assert evs1, "rate 0.3 over 20 s should draw events"
+    for ev in evs1:
+        assert ev.kind in ("link_down", "node_down", "recover")
+        if ev.node is not None:
+            assert ev.node not in ("v4", "v13")
+    assert generate_failures(NET, rate_per_s=0.0, horizon_s=20.0) == []
+    # a different seed draws a different schedule
+    evs3 = generate_failures(NET, rate_per_s=0.3, horizon_s=20.0, seed=8,
+                             protect=("v4", "v13"))
+    assert [e.to_dict() for e in evs3] != [e.to_dict() for e in evs1]
+
+
+def test_failure_event_validation():
+    with pytest.raises(ValueError):
+        FailureEvent(t_s=0.0, kind="meteor", node="v1")
+    with pytest.raises(ValueError):
+        FailureEvent(t_s=0.0, kind="link_down")  # no resource named
+    ev = FailureEvent(t_s=1.5, kind="node_down", node="v2")
+    assert FailureEvent.from_dict(ev.to_dict()) == ev

@@ -1,0 +1,176 @@
+"""Negative tests for the trace re-verifier (docs/failures.md).
+
+``replay_verify_sim_report`` is the auditor of record for every sim/gateway
+trace, including failure/migration traces.  These tests corrupt an otherwise
+valid trace one field at a time — drop a departure, inflate a demand, reorder
+timestamps, tamper a migration audit entry — and assert the verifier rejects
+it *with an actionable message naming the violation*, not just ``False``.
+Each tamper targets one specific check, so a refactor that silently weakens
+a check shows up here as a passing replay of a corrupt trace.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import replace
+
+import pytest
+
+from repro.core import IF, nsfnet, resnet101_profile
+from repro.serve import (FailureEvent, ServeSim, ServedRequest,
+                         generate_fleet, plan_footprint, replay_verify_sim,
+                         replay_verify_sim_report)
+
+NET = nsfnet()
+PROF = resnet101_profile()
+
+
+def _fleet(n, seed=0, **kw):
+    return generate_fleet(NET, n, "v4", "v13", 2, IF, 3, seed=seed,
+                          arrival="poisson", hold_model="exp",
+                          hold_time_s=6.0, **kw)
+
+
+def _copy(served):
+    """Round-trip through the serialized form: what a reloaded artifact sees
+    (and a fresh mutable copy safe to corrupt)."""
+    return [ServedRequest.from_dict(s.to_dict()) for s in served]
+
+
+def _failure_run():
+    """A deterministic run with at least one completed migration: fail a
+    link under a live chain's footprint mid-hold, recover it later."""
+    fleet = _fleet(14, seed=2)
+    base = ServeSim(NET, PROF, retry=True).run(fleet)
+    victim = next(s for s in base.served
+                  if s.accepted and s.depart_s is not None
+                  and s.depart_s - s.admit_s > 1.0
+                  and plan_footprint(s.plan)[0])
+    link = sorted(plan_footprint(victim.plan)[0])[0]
+    t_fail = victim.admit_s + 0.25 * (victim.depart_s - victim.admit_s)
+    failures = [FailureEvent(t_s=t_fail, kind="link_down", link=link),
+                FailureEvent(t_s=t_fail + 3.0, kind="recover", link=link)]
+    out = ServeSim(NET, PROF, retry=True).run(fleet, failures=failures)
+    assert any(s.migrations for s in out.served), \
+        "fixture must produce at least one migration"
+    assert replay_verify_sim(NET, PROF, out.served, failures=out.failures)
+    return out
+
+
+OUT = _failure_run()
+
+
+def _tamperable():
+    served = _copy(OUT.served)
+    idx = next(i for i, s in enumerate(served) if s.migrations)
+    return served, served[idx]
+
+
+# ------------------------------------------------------------ record tampers
+def test_baseline_trace_verifies():
+    assert replay_verify_sim_report(
+        NET, PROF, _copy(OUT.served), failures=OUT.failures) is None
+
+
+def test_accepted_record_without_plan_is_rejected():
+    served, rec = _tamperable()
+    rec.plan = None
+    msg = replay_verify_sim_report(NET, PROF, served, failures=OUT.failures)
+    assert msg is not None and "has no plan" in msg
+    assert f"request_id={rec.request.request_id}" in msg
+
+
+def test_inflated_demand_exceeds_residual_capacity():
+    served, rec = _tamperable()
+    rec.request = replace(rec.request, rate_rps=1e9)  # absurd bandwidth need
+    msg = replay_verify_sim_report(NET, PROF, served, failures=OUT.failures)
+    assert msg is not None and "exceeds residual capacity" in msg
+
+
+def test_reordered_admit_depart_tie_is_rejected():
+    """Swapping a chain's admit/depart instants makes its release precede
+    its commit — the replay must call out the uncommitted release."""
+    served = _copy(OUT.served)
+    rec = next(s for s in served if s.accepted and s.depart_s is not None
+               and not s.migrations and s.failed_s is None)
+    rec.admit_s, rec.depart_s = rec.depart_s, rec.admit_s
+    msg = replay_verify_sim_report(NET, PROF, served, failures=OUT.failures)
+    assert msg is not None and "never committed" in msg
+
+
+def test_dropped_departure_leaks_capacity():
+    """Erasing a departure leaves its demand committed forever; the replay
+    must detect the leak the moment any later commit no longer fits."""
+    fleet = _fleet(32, seed=0)  # overloaded: retries wait on departures
+    sim = ServeSim(NET, PROF, retry=True).run(fleet)
+    assert replay_verify_sim(NET, PROF, sim.served)
+    retried = [s for s in sim.served if s.accepted and s.n_retries > 0]
+    assert retried, "fixture must exercise the retry queue"
+    served = _copy(sim.served)
+    # drop every departure that freed capacity before the first retry admit
+    t_retry = min(s.admit_s for s in retried)
+    for s in served:
+        if s.accepted and s.depart_s is not None and s.depart_s <= t_retry:
+            s.depart_s = None
+    msg = replay_verify_sim_report(NET, PROF, served)
+    assert msg is not None and "exceeds residual capacity" in msg
+
+
+# --------------------------------------------------------- migration tampers
+def test_migration_timestamps_out_of_order():
+    served, rec = _tamperable()
+    m = rec.migrations[0]
+    m["t_restored"] = m["t_down"] - 1.0
+    msg = replay_verify_sim_report(NET, PROF, served, failures=OUT.failures)
+    assert msg is not None and "timestamps out of order" in msg
+
+
+def test_migration_moved_bytes_mismatch():
+    served, rec = _tamperable()
+    rec.migrations[0]["moved_bytes"] += 12345.0
+    msg = replay_verify_sim_report(NET, PROF, served, failures=OUT.failures)
+    assert msg is not None and "moved_bytes mismatch" in msg
+
+
+def test_migration_disruption_shorter_than_outage():
+    served, rec = _tamperable()
+    m = rec.migrations[0]
+    # disruption must cover at least the outage interval; under-reporting it
+    # (e.g. to flatter the cost model) is a trace corruption
+    m["disruption_s"] = (m["t_restored"] - m["t_down"]) - 1.0
+    msg = replay_verify_sim_report(NET, PROF, served, failures=OUT.failures)
+    assert msg is not None and "shorter than its outage" in msg
+
+
+def test_migration_missing_old_plan_is_malformed():
+    served, rec = _tamperable()
+    del rec.migrations[0]["old_plan"]
+    msg = replay_verify_sim_report(NET, PROF, served, failures=OUT.failures)
+    assert msg is not None and "malformed migration entries" in msg
+
+
+def test_failed_before_last_restoration_is_rejected():
+    served, rec = _tamperable()
+    rec.failed_s = rec.migrations[-1]["t_restored"] - 1.0
+    msg = replay_verify_sim_report(NET, PROF, served, failures=OUT.failures)
+    assert msg is not None and "precedes its last restoration" in msg
+
+
+def test_unmigrated_chain_spanning_down_resource_is_rejected():
+    """Erasing a victim's migration history claims it sat on the failed
+    link through the outage — down_ok must veto the instant of the mark."""
+    served, rec = _tamperable()
+    old_plan = rec.migrations[0]["old_plan"]  # flat plan dict
+    rec.plan = ServedRequest.from_dict(
+        {**rec.to_dict(), **old_plan, "migrations": []}).plan
+    rec.migrations = []
+    rec.failed_s = None
+    msg = replay_verify_sim_report(NET, PROF, served, failures=OUT.failures)
+    assert msg is not None and "down resource" in msg
+
+
+def test_bool_and_report_forms_agree():
+    served, rec = _tamperable()
+    rec.migrations[0]["moved_bytes"] *= 2.0
+    assert not replay_verify_sim(NET, PROF, served, failures=OUT.failures)
+    assert replay_verify_sim_report(
+        NET, PROF, served, failures=OUT.failures) is not None

@@ -1,0 +1,212 @@
+"""Property suite for ResidualState under commit/release/fail/recover
+interleavings (docs/failures.md).
+
+The invariants locked down here are what every serve driver trusts blindly:
+
+* ``conservation_ok`` after *every* operation — the running tallies, the
+  base-capacity bounds, and the resource->chains reverse index all re-derive
+  from the committed list at any interleaving point;
+* a fully drained state has exactly-zero tallies (no float residue survives
+  the exact-count snap in ``release``) and empty indexes;
+* releasing a chain that is not committed — double release, or a chain that
+  was never admitted — raises ``KeyError`` instead of silently corrupting
+  the accounting;
+* ``fail_link`` / ``fail_node`` return exactly the committed chains whose
+  footprint touches the resource, in commit order, and committing onto a
+  down resource raises.
+
+A deterministic seeded grid always runs; the same machine is additionally
+fuzzed with >= 200 random interleavings when ``hypothesis`` is installed
+(optional — without it the grid is the coverage, not a skip of the module).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import replace
+
+import pytest
+
+from repro.core import IF, TR, candidate_sets, nsfnet, resnet101_profile, solve
+from repro.serve import ResidualState, ServeRequest, plan_footprint
+
+NET = nsfnet()
+PROF = resnet101_profile()
+NODES = sorted(NET.nodes)
+LINKS = sorted(NET.links)
+
+
+def _make_pool():
+    """A few solved (request, plan) shapes to commit copies of: distinct
+    batch sizes, modes, and candidate seeds give distinct footprints."""
+    pool = []
+    for seed, (b, mode) in enumerate([(1, IF), (2, IF), (4, IF), (2, TR)]):
+        cands = candidate_sets(3, seed, NODES, "v4", "v13", 2)
+        req = ServeRequest(
+            request_id=0, source="v4", destination="v13", batch_size=b,
+            mode=mode, K=3, candidates=tuple(tuple(c) for c in cands),
+            rate_rps=1.0)
+        out = solve(req.problem(NET, PROF), "bcd")
+        if out.plan is not None:
+            pool.append((req, out.plan))
+    assert len(pool) >= 3, "pool construction should find feasible plans"
+    return pool
+
+
+POOL = _make_pool()
+
+
+def _assert_drained_exactly(state: ResidualState) -> None:
+    """Every tally is exactly zero (fits() may have seeded defaultdict keys,
+    so emptiness means all-zero values, not no keys) and the indexes are
+    empty."""
+    for tally in (state.used_link_fw, state.used_link_bw,
+                  state.used_mem, state.used_disk):
+        assert all(v == 0.0 for v in tally.values()), dict(tally)
+    assert not state.committed
+    assert not state._hosted_links
+    assert not state._hosted_nodes
+    assert not state._commit_seq
+    assert state.conservation_ok(PROF)
+
+
+def run_interleaving(rng: random.Random, n_ops: int = 60) -> None:
+    """One randomized commit/release/fail/recover schedule, with the full
+    invariant battery asserted after every operation."""
+    state = ResidualState(NET)
+    committed: dict[int, tuple[ServeRequest, object]] = {}
+    uid = 0
+    for _ in range(n_ops):
+        op = rng.choice(("commit", "commit", "release", "fail_link",
+                         "fail_node", "recover"))
+        if op == "commit":
+            req0, plan = POOL[rng.randrange(len(POOL))]
+            req = replace(req0, request_id=uid)
+            if state.fits(PROF, req, plan):
+                state.commit(PROF, req, plan)
+                committed[uid] = (req, plan)
+                uid += 1
+            else:
+                # a plan that does not fit (or touches a down resource)
+                # must be rejected by commit too, with nothing mutated
+                if not state.footprint_clear(plan):
+                    with pytest.raises(ValueError):
+                        state.commit(PROF, req, plan)
+        elif op == "release" and committed:
+            rid = rng.choice(sorted(committed))
+            req, plan = committed.pop(rid)
+            state.release(PROF, req, plan)
+        elif op == "fail_link":
+            u, v = LINKS[rng.randrange(len(LINKS))]
+            victims = state.fail_link(u, v)
+            # exactly the committed chains whose footprint crosses the link,
+            # in commit order (uid assignment is commit order)
+            want = sorted(
+                rid for rid, (_, plan) in committed.items()
+                if {(u, v), (v, u)} & plan_footprint(plan)[0])
+            assert victims == want
+            for rid in victims:  # the migration engine releases every victim
+                req, plan = committed.pop(rid)
+                state.release(PROF, req, plan)
+            assert state.down_ok()
+        elif op == "fail_node":
+            node = NODES[rng.randrange(len(NODES))]
+            victims = state.fail_node(node)
+            want = sorted(
+                rid for rid, (_, plan) in committed.items()
+                if node in plan_footprint(plan)[1]
+                or any(node in link for link in plan_footprint(plan)[0]))
+            assert victims == want
+            for rid in victims:
+                req, plan = committed.pop(rid)
+                state.release(PROF, req, plan)
+            assert state.down_ok()
+        elif op == "recover":
+            if state.down_nodes and rng.random() < 0.5:
+                state.recover_node(rng.choice(sorted(state.down_nodes)))
+            elif state.down_links:
+                u, v = rng.choice(sorted(state.down_links))
+                state.recover_link(u, v)
+        assert state.conservation_ok(PROF), f"conservation broken after {op}"
+    # drain everything still committed: the state must compare clean
+    for rid in sorted(committed):
+        req, plan = committed.pop(rid)
+        state.release(PROF, req, plan)
+    _assert_drained_exactly(state)
+
+
+# ------------------------------------------------------- deterministic grid
+@pytest.mark.parametrize("seed", range(12))
+def test_random_interleaving_grid(seed):
+    run_interleaving(random.Random(seed * 9176 + 3))
+
+
+def test_double_release_raises():
+    req0, plan = POOL[0]
+    req = replace(req0, request_id=7)
+    state = ResidualState(NET)
+    state.commit(PROF, req, plan)
+    state.release(PROF, req, plan)
+    with pytest.raises(KeyError):
+        state.release(PROF, req, plan)
+    _assert_drained_exactly(state)
+
+
+def test_release_of_never_committed_raises():
+    req0, plan = POOL[0]
+    state = ResidualState(NET)
+    with pytest.raises(KeyError):
+        state.release(PROF, replace(req0, request_id=1), plan)
+    # a second chain's commit must not make a foreign release acceptable
+    other_req, other_plan = POOL[1]
+    state.commit(PROF, replace(other_req, request_id=2), other_plan)
+    with pytest.raises(KeyError):
+        state.release(PROF, replace(req0, request_id=1), plan)
+    assert state.conservation_ok(PROF)
+
+
+def test_commit_onto_down_resource_raises():
+    req0, plan = POOL[0]
+    req = replace(req0, request_id=11)
+    state = ResidualState(NET)
+    links, nodes = plan_footprint(plan)
+    u, v = sorted(links)[0]
+    state.fail_link(u, v)
+    with pytest.raises(ValueError, match="down resource"):
+        state.commit(PROF, req, plan)
+    state.recover_link(u, v)
+    state.commit(PROF, req, plan)  # recovery restores commitability
+    node = sorted(nodes)[0]
+    state.release(PROF, req, plan)
+    state.fail_node(node)
+    with pytest.raises(ValueError, match="down resource"):
+        state.commit(PROF, req, plan)
+    assert state.conservation_ok(PROF)
+
+
+def test_exact_zero_after_many_cycles():
+    """Hundreds of commit/release cycles on hot keys must drain to exactly
+    zero — the count-based snap, not an epsilon, decides emptiness."""
+    state = ResidualState(NET)
+    for i in range(300):
+        req0, plan = POOL[i % len(POOL)]
+        req = replace(req0, request_id=i)
+        if state.fits(PROF, req, plan):
+            state.commit(PROF, req, plan)
+            state.release(PROF, req, plan)
+    _assert_drained_exactly(state)
+
+
+# ------------------------------------------------------ hypothesis fuzzing
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:  # optional dependency; deterministic grid still ran
+    _HAS_HYPOTHESIS = False
+
+if _HAS_HYPOTHESIS:
+
+    @settings(max_examples=200, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1),
+           n_ops=st.integers(10, 80))
+    def test_random_interleaving_fuzz(seed, n_ops):
+        run_interleaving(random.Random(seed), n_ops=n_ops)
