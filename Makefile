@@ -9,14 +9,16 @@ export PYTHONPATH := src:$(PYTHONPATH)
 ## and serving-gateway throughput smoke gates (the CI gate)
 verify: test sweep-quick bench-solver-smoke bench-serve-smoke
 
-## verify-fast: the core dev loop (<40s) — deselects the multi-minute
+## verify-fast: the core dev loop (<45s) — deselects the multi-minute
 ## jax-stack tests (pytest -m slow: shard_map subprocess runs, kernel
 ## sweeps, dry-runs) and runs quick serving sweeps: one static admission
-## round, one event-driven churn suite (exercises the ServeSim loop), and
-## one failure-injection suite (exercises migration + trace replay)
+## round, one event-driven churn suite (exercises the ServeSim loop), one
+## failure-injection suite (exercises migration + trace replay), and one
+## mixed training/inference suite (exercises the round-trip TR-pipe model
+## and mode-split contention reporting, docs/training.md)
 verify-fast: test-fast
 	$(PYTHON) -m repro.sweep --suite nsfnet_multirequest nsfnet_churn \
-		nsfnet_failures --quick --out sweep_out
+		nsfnet_failures nsfnet_mixed_training --quick --out sweep_out
 
 ## test: tier-1 test suite (ROADMAP.md)
 test:

@@ -37,6 +37,7 @@ import time
 
 from repro.core import (
     IF,
+    PIPE,
     TR,
     EvalCache,
     ProblemInstance,
@@ -52,12 +53,15 @@ from .common import DEST, NSFNET_NODES, SOURCE
 
 # Instance population: both heavy candidate configurations from the paper
 # sweep, inference and training, two batch sizes, distinct candidate seeds.
-# 64 distinct instances, cycled to fill larger batches (recurring instances
-# are exactly the serve-planner admission regime).
+# 64 distinct fused instances plus 32 round-trip TR-pipe instances (appended
+# last, so small-batch cells — including the smoke gate — keep the original
+# fused-only mix), cycled to fill larger batches (recurring instances are
+# exactly the serve-planner admission regime).
 _CONFIGS = [(3, 6), (5, 4)]
 _MODES = [IF, TR]
 _BATCHES = [8, 128]
 _SEEDS = range(1, 9)
+_TR_PIPE_M = 4  # pipeline depth of the round-trip training instances
 
 FULL_BATCH_SIZES = [1, 8, 64, 256, 1024]
 SMOKE_BATCH_SIZES = [8]
@@ -81,6 +85,22 @@ def build_instances() -> list[ProblemInstance]:
                     instances.append(ProblemInstance(
                         net, profile, req, K,
                         tuple(tuple(c) for c in cands)))
+    # Round-trip training pipelines (docs/training.md): TR + pipe instances
+    # exercising the two-bottleneck (tau_fw, tau_bw) pair scan.  Appended
+    # after the fused population so cells with batch <= 64 are unchanged.
+    for K, per_stage in _CONFIGS:
+        for b in _BATCHES:
+            for seed in _SEEDS:
+                cands = candidate_sets(K, seed, NSFNET_NODES, SOURCE,
+                                       DEST, per_stage=per_stage)
+                req = ServiceChainRequest(model_id=profile.model_id,
+                                          source=SOURCE, destination=DEST,
+                                          batch_size=b, mode=TR,
+                                          schedule=PIPE,
+                                          n_microbatches=_TR_PIPE_M)
+                instances.append(ProblemInstance(
+                    net, profile, req, K,
+                    tuple(tuple(c) for c in cands)))
     return instances
 
 
@@ -164,12 +184,16 @@ def run_grid(batch_sizes: list[int], engines: list[str]) -> dict:
         "benchmark": "solver_throughput",
         "solver": "dfts",
         "n_distinct_instances": len(instances),
+        "n_tr_pipe_instances": sum(
+            1 for p in instances if p.request.mode == TR
+            and p.request.schedule == PIPE),
         "warm_reps": _WARM_REPS,
         "note": ("warm = steady-state re-solve of a recurring instance "
                  "population (serve-admission regime); the DP scan runs on "
                  "every call — only derived encode/decode artifacts are "
                  "cached.  pallas on CPU is interpret-mode (correctness "
-                 "path, expected slow)."),
+                 "path, expected slow).  TR-pipe instances price the "
+                 "round-trip two-bottleneck model (docs/training.md)."),
         "results": rows,
     }
 

@@ -21,6 +21,7 @@ REQUIRED_DOCUMENTED = (
     "src/repro/kernels/minplus.py",
     "src/repro/serve/gateway.py",
     "src/repro/serve/failures.py",
+    "src/repro/core/trainpipe.py",
 )
 
 

@@ -72,6 +72,9 @@ from .problem import (FEASIBLE, INFEASIBLE, OPTIMAL, STATUSES, ProblemInstance,
 from .resnet101_profile import resnet101_profile
 from .segmentation import k_sequence_segmentation
 from .topology import candidate_sets, nsfnet, random_network, tpu_pod_topology
+from .trainpipe import (evaluate_round_trip, round_trip_bottleneck_s,
+                        round_trip_stage_times, round_trip_taus,
+                        segment_comp_dir_s)
 
 # Legacy flat entry points: thin deprecated shims over the registry.  They
 # keep the historical `(net, profile, request, K, candidates, **kwargs)`
@@ -107,4 +110,6 @@ __all__ = [
     "resnet101_profile",
     "even_split", "segments_from_sizes", "cuts_from_segments", "validate_segments",
     "transmission_time_s", "tpu_group_compute_model",
+    "evaluate_round_trip", "round_trip_bottleneck_s", "round_trip_stage_times",
+    "round_trip_taus", "segment_comp_dir_s",
 ]

@@ -9,7 +9,9 @@ stage; this module runs the *same* recurrences as dense array programs:
   N problem instances at once;
 * the K-sequence segmentation DPs (seq and bottleneck-capped pipe variants)
   are ``lax.scan``s over segment count with dense (e2, e[, tau]) transition
-  tensors.
+  tensors; the round-trip training variants (mode=TR, schedule=pipe, M > 1 —
+  docs/training.md) reuse the same scans under per-direction (F, B) cap
+  scans mirroring dfts._dfts_pipe_tr and segmentation._run_k_seq_pipe_tr.
 
 Bit-parity contract (tests/test_jax_solvers.py): every encoded cost uses the
 exact same IEEE-754 operations in the same order as the scalar oracles, +inf
@@ -279,6 +281,34 @@ def _comp_fits_grid(net: PhysicalNetwork, profile: ModelProfile,
     return _memo_put(_GRID_MEMO, key, grid)
 
 
+def _comp_fits_grid_dir(net: PhysicalNetwork, profile: ModelProfile,
+                        request: ServiceChainRequest, node: str,
+                        direction: str) -> np.ndarray:
+    """(L+1, L+1) grid [lo, hi] of ``trainpipe.segment_comp_dir_s`` at
+    ``node`` (+inf where segment_fits fails or lo > hi) — the per-direction
+    twin of `_comp_fits_grid`, keyed with the direction appended (the 6-tuple
+    is length-disjoint from the fused 5-tuple keys in the shared memo)."""
+    b = request.batch_size
+    key = (net.content_key(), profile.content_key(), b, request.mode, node,
+           direction)
+    hit = _GRID_MEMO.get(key)
+    if hit is not None:
+        return hit
+    pt = _profile_tables(profile, request.mode)
+    spec = net.nodes[node]
+    a, beta = spec.compute._coeffs(b)
+    tau = max(0.0, (spec.compute.alpha_tau * b + spec.compute.beta_tau)) / 1e3
+    phi = pt.phi_fw if direction == FW else pt.phi_bw
+    comp = np.maximum(0.0, (a * b + beta) * phi) / 1e3 + tau
+    mem_load = pt.mem + b * pt.peak
+    fits = (pt.disk <= spec.disk_capacity) & (mem_load <= spec.mem_capacity)
+    grid = np.where(fits, comp, INF)
+    lo = np.arange(pt.L + 1)
+    grid[(lo[:, None] > lo[None, :]) | (lo[:, None] < 1)] = INF
+    grid.setflags(write=False)
+    return _memo_put(_GRID_MEMO, key, grid)
+
+
 class _EncodedSeq(SimpleNamespace):
     """Dense arrays of one (instance, segments) DFTS tour: comp (K, Sp),
     D (K-1, Sp, Sp), tail (Sp,), plus cut_sizes/cands/tail_bw metadata."""
@@ -297,14 +327,27 @@ def _encode_seq(net: PhysicalNetwork, profile: ModelProfile,
     cands = [list(c) for c in cands]
     b = request.batch_size
     training = request.mode == TR
+    round_trip = (training and request.schedule == PIPE
+                  and request.microbatches() > 1)
     idx = net.node_index()
     Sp = _pow2(max(len(c) for c in cands))
     comp = np.full((K, Sp), INF)
+    comp_fw = comp_bw = None
+    if round_trip:
+        comp_fw = np.full((K, Sp), INF)
+        comp_bw = np.full((K, Sp), INF)
     for k, (lo, hi) in enumerate(segments):
         # one memoized grid per node: gather the (lo, hi) scalar per candidate
         comp[k, :len(cands[k])] = [
             _comp_fits_grid(net, profile, request, n)[lo, hi]
             for n in cands[k]]
+        if round_trip:
+            comp_fw[k, :len(cands[k])] = [
+                _comp_fits_grid_dir(net, profile, request, n, FW)[lo, hi]
+                for n in cands[k]]
+            comp_bw[k, :len(cands[k])] = [
+                _comp_fits_grid_dir(net, profile, request, n, BW)[lo, hi]
+                for n in cands[k]]
     cut_sizes: list[tuple[float, float | None]] = [(0.0, None)] * K
     D = np.full((K - 1, Sp, Sp), INF)
     for k in range(1, K):
@@ -319,21 +362,23 @@ def _encode_seq(net: PhysicalNetwork, profile: ModelProfile,
     tail = np.full(Sp, INF)
     tail_mat = net.frontier_matrix(tuple(cands[K - 1]), 0.0, tail_bw)
     tail[:len(cands[K - 1])] = tail_mat[:, idx[request.destination]]
-    enc = _EncodedSeq(comp=comp, D=D, tail=tail, cut_sizes=cut_sizes,
-                      cands=cands, segments=segments, tail_bw=tail_bw, Sp=Sp,
-                      key=key)
+    enc = _EncodedSeq(comp=comp, comp_fw=comp_fw, comp_bw=comp_bw, D=D,
+                      tail=tail, cut_sizes=cut_sizes, cands=cands,
+                      segments=segments, tail_bw=tail_bw, Sp=Sp, key=key)
     return _memo_put(_ENCODE_MEMO, key, enc)
 
 
 # --------------------------------------------------------- decode + fast eval
 def _stage_path_memo(net: PhysicalNetwork, src: str, dst: str, fw: float,
                      bw: float | None, cap: float | None = None,
-                     scale: float = 1.0) -> tuple:
-    key = (net.content_key(), src, dst, fw, bw, cap, scale)
+                     scale: float = 1.0,
+                     cap_bw: float | None = None) -> tuple:
+    key = (net.content_key(), src, dst, fw, bw, cap, scale, cap_bw)
     hit = _PATH_MEMO.get(key)
     if hit is None:
         hit = _memo_put(_PATH_MEMO, key,
-                        tuple(_stage_path(net, src, dst, fw, bw, cap, scale)))
+                        tuple(_stage_path(net, src, dst, fw, bw, cap, scale,
+                                          cap_bw)))
     return hit
 
 
@@ -352,9 +397,35 @@ def _path_cost(net: PhysicalNetwork, path: tuple, fw: float,
     return hit
 
 
+def _path_dir_vectors(net: PhysicalNetwork, path: tuple, size_bytes: float,
+                      direction: str) -> tuple[tuple, tuple]:
+    """Per-link (transmission times, propagation delays) of shipping
+    ``size_bytes`` along ``path`` in one direction, in link order — the
+    round-trip evaluator accumulates per link, so the memo keeps the vectors
+    (the direction string keeps keys disjoint from `_path_cost` entries)."""
+    key = (net.content_key(), path, size_bytes, direction)
+    hit = _PATHCOST_MEMO.get(key)
+    if hit is None:
+        ts, ds = [], []
+        for u, v in zip(path, path[1:]):
+            link = net.links[(u, v)]
+            ts.append(transmission_time_s(size_bytes, link.rate(direction)))
+            ds.append(link.delay(direction))
+        hit = _memo_put(_PATHCOST_MEMO, key, (tuple(ts), tuple(ds)))
+    return hit
+
+
 def _plan_comp_vals(net: PhysicalNetwork, profile: ModelProfile,
                     request: ServiceChainRequest, plan: Plan) -> list[float]:
     return [float(_comp_fits_grid(net, profile, request, node)[lo, hi])
+            for (lo, hi), node in zip(plan.segments, plan.placement)]
+
+
+def _plan_comp_vals_dir(net: PhysicalNetwork, profile: ModelProfile,
+                        request: ServiceChainRequest, plan: Plan,
+                        direction: str) -> list[float]:
+    return [float(_comp_fits_grid_dir(net, profile, request, node,
+                                      direction)[lo, hi])
             for (lo, hi), node in zip(plan.segments, plan.placement)]
 
 
@@ -363,6 +434,9 @@ def _fast_evaluate(net: PhysicalNetwork, profile: ModelProfile,
     """PlanEvaluator.evaluate, bit-for-bit, from memoized components."""
     b = request.batch_size
     training = request.mode == TR
+    if (training and request.schedule == PIPE
+            and request.microbatches() > 1):
+        return _fast_evaluate_round_trip(net, profile, request, plan)
     comp_vals = _plan_comp_vals(net, profile, request, plan)
     if request.schedule == PIPE:
         M = request.microbatches()
@@ -399,6 +473,61 @@ def _fast_evaluate(net: PhysicalNetwork, profile: ModelProfile,
     return LatencyBreakdown(comp_s, trans_s, prop_s)
 
 
+def _fast_evaluate_round_trip(net: PhysicalNetwork, profile: ModelProfile,
+                              request: ServiceChainRequest,
+                              plan: Plan) -> LatencyBreakdown:
+    """``trainpipe.evaluate_round_trip``, bit-for-bit, from memoized
+    components — the same per-link / per-stage accumulation order (forward
+    wave, psi_K = 0 tail, backward wave), so totals are identical doubles."""
+    b = request.batch_size
+    M = request.microbatches()
+    comp_s = trans_s = prop_s = 0.0
+    tau_fw = tau_bw = 0.0
+    for t in _plan_comp_vals_dir(net, profile, request, plan, FW):
+        comp_s += t / M
+        tau_fw = max(tau_fw, t)
+    for k, path in enumerate(plan.paths):
+        fw = b * profile.cut_bytes(plan.segments[k][1], FW)
+        ts, ds = _path_dir_vectors(net, tuple(path), fw, FW)
+        for t, d in zip(ts, ds):
+            trans_s += t / M
+            prop_s += d
+            tau_fw = max(tau_fw, t)
+    if plan.tail_path:  # psi_K = 0: forward propagation only
+        _, prop, _ = _path_cost(net, tuple(plan.tail_path), 0.0, None)
+        prop_s += prop
+    for t in _plan_comp_vals_dir(net, profile, request, plan, BW):
+        comp_s += t / M
+        tau_bw = max(tau_bw, t)
+    for k, path in enumerate(plan.paths):
+        bw = b * profile.cut_bytes(plan.segments[k][1], BW)
+        ts, ds = _path_dir_vectors(net, tuple(path), bw, BW)
+        for t, d in zip(ts, ds):
+            trans_s += t / M
+            prop_s += d
+            tau_bw = max(tau_bw, t)
+    return LatencyBreakdown(comp_s, trans_s, prop_s,
+                            (M - 1) * (tau_fw + tau_bw) / M)
+
+
+def _fast_round_trip_taus(net: PhysicalNetwork, profile: ModelProfile,
+                          request: ServiceChainRequest,
+                          plan: Plan) -> tuple[float, float]:
+    """``trainpipe.round_trip_taus`` from the memoized components."""
+    b = request.batch_size
+    tau_fw = max(_plan_comp_vals_dir(net, profile, request, plan, FW))
+    tau_bw = max(_plan_comp_vals_dir(net, profile, request, plan, BW))
+    for k, path in enumerate(plan.paths):
+        cut = plan.segments[k][1]
+        fw = b * profile.cut_bytes(cut, FW)
+        bw = b * profile.cut_bytes(cut, BW)
+        for t in _path_dir_vectors(net, tuple(path), fw, FW)[0]:
+            tau_fw = max(tau_fw, t)
+        for t in _path_dir_vectors(net, tuple(path), bw, BW)[0]:
+            tau_bw = max(tau_bw, t)
+    return tau_fw, tau_bw
+
+
 def _fast_latency(net, profile, request, plan) -> float:
     return _fast_evaluate(net, profile, request, plan).total_s
 
@@ -418,7 +547,8 @@ def _fast_bottleneck(net: PhysicalNetwork, profile: ModelProfile,
 
 def _decode_seq(net: PhysicalNetwork, request: ServiceChainRequest,
                 enc: _EncodedSeq, tail_src: int, srcs: np.ndarray,
-                cap: float | None = None, scale: float = 1.0) -> Plan:
+                cap: float | None = None, scale: float = 1.0,
+                cap_bw: float | None = None) -> Plan:
     """Backtrack one instance's placement/paths from the scan outputs —
     exactly the oracle's backtracking (same memoized sssp parent trees)."""
     K = len(enc.segments)
@@ -429,8 +559,9 @@ def _decode_seq(net: PhysicalNetwork, request: ServiceChainRequest,
         pi = int(srcs[k - 1, pi])
         placement[k - 1] = enc.cands[k - 1][pi]
     paths = [list(_stage_path_memo(net, placement[k - 1], placement[k],
-                                   *enc.cut_sizes[k], cap, scale))
+                                   *enc.cut_sizes[k], cap, scale, cap_bw))
              for k in range(1, K)]
+    # the tail ships zero bytes, so the backward cap never prunes its links
     tail = _stage_path_memo(net, placement[K - 1], request.destination, 0.0,
                             enc.tail_bw if cap is None and scale == 1.0
                             else None, cap, scale)
@@ -442,15 +573,17 @@ def _decode_seq(net: PhysicalNetwork, request: ServiceChainRequest,
 def _decode_eval_seq(net: PhysicalNetwork, profile: ModelProfile,
                      request: ServiceChainRequest, enc: _EncodedSeq,
                      tail_src, srcs: np.ndarray, cap: float | None = None,
-                     scale: float = 1.0) -> tuple[Plan, LatencyBreakdown]:
+                     scale: float = 1.0, cap_bw: float | None = None
+                     ) -> tuple[Plan, LatencyBreakdown]:
     """Backtrack + evaluate, memoized by the *scan output* (plus the encode's
     content key): recurring instances pay only the DP scan on warm calls —
     the optimization itself always runs; only the derived backtracking/
     path/latency reconstruction is cached, like the oracle's EvalCache."""
-    key = (enc.key, int(tail_src), srcs.tobytes(), cap, scale)
+    key = (enc.key, int(tail_src), srcs.tobytes(), cap, scale, cap_bw)
     hit = _PLAN_MEMO.get(key)
     if hit is None:
-        plan = _decode_seq(net, request, enc, tail_src, srcs, cap, scale)
+        plan = _decode_seq(net, request, enc, tail_src, srcs, cap, scale,
+                           cap_bw)
         hit = _memo_put(_PLAN_MEMO, key,
                         (plan, _fast_evaluate(net, profile, request, plan)))
     return hit
@@ -549,6 +682,96 @@ def _dfts_jax_pipe(net, profile, request, K, cands, segments,
     return best_pair
 
 
+def _capped_tour_jax_tr(net, profile, request, enc: _EncodedSeq,
+                        cap_fw: float, cap_bw: float, inv_M: float,
+                        use_pallas: bool
+                        ) -> tuple[Plan, LatencyBreakdown] | None:
+    """The per-direction-capped round-trip tour of `dfts._capped_tour_tr`,
+    on the dense encode: candidates pruned to comp_fw <= cap_fw AND
+    comp_bw <= cap_bw, links pruned per direction inside the frontier
+    matrices."""
+    K = len(enc.segments)
+    ceff = np.where((enc.comp_fw <= cap_fw) & (enc.comp_bw <= cap_bw),
+                    enc.comp * inv_M, INF)
+    idx = net.node_index()
+    Sp = enc.Sp
+    D = np.full((K - 1, Sp, Sp), INF)
+    for k in range(1, K):
+        fw, bw = enc.cut_sizes[k]
+        Dfull = net.frontier_matrix(tuple(enc.cands[k - 1]), fw, bw, cap_fw,
+                                    inv_M, cap_bw)
+        cols = [idx[n] for n in enc.cands[k]]
+        D[k - 1, :len(enc.cands[k - 1]), :len(enc.cands[k])] = Dfull[:, cols]
+    # psi_K = 0 tail: zero bytes ship, so the caps never prune a tail link
+    tail = np.full(Sp, INF)
+    tail_mat = net.frontier_matrix(tuple(enc.cands[K - 1]), 0.0, None, cap_fw,
+                                   inv_M)
+    tail[:len(enc.cands[K - 1])] = tail_mat[:, idx[request.destination]]
+    total, tail_src, srcs = _run_dfts_scan(ceff[None], D[None], tail[None],
+                                           use_pallas)
+    if not np.isfinite(total[0]):
+        return None
+    return _decode_eval_seq(net, profile, request, enc, tail_src[0],
+                            srcs[:, 0], cap_fw, inv_M, cap_bw)
+
+
+def _dfts_jax_pipe_tr(net, profile, request, K, cands, segments,
+                      use_pallas: bool
+                      ) -> tuple[Plan, LatencyBreakdown] | None:
+    """`dfts._dfts_pipe_tr` with every capped tour on the jitted scan:
+    identical (F, B) pair enumeration, incumbent bound, and skip/break
+    conditions, so plans and latencies are bit-identical to the scalar
+    oracle (docs/training.md)."""
+    enc = _encode_seq(net, profile, request, K, cands, segments)
+    for k in range(K):
+        if not np.isfinite(enc.comp[k, :len(enc.cands[k])]).any():
+            return None
+    M = request.microbatches()
+    inv_M = 1.0 / M
+    c_bub = (M - 1) / M
+
+    lb_fw = max(float(enc.comp_fw[k][np.isfinite(enc.comp_fw[k])].min())
+                for k in range(K))
+    lb_bw = max(float(enc.comp_bw[k][np.isfinite(enc.comp_bw[k])].min())
+                for k in range(K))
+    fw_vals = {float(v) for k in range(K)
+               for v in enc.comp_fw[k][np.isfinite(enc.comp_fw[k])]}
+    bw_vals = {float(v) for k in range(K)
+               for v in enc.comp_bw[k][np.isfinite(enc.comp_bw[k])]}
+    for k in range(1, K):
+        fw, bw = enc.cut_sizes[k]
+        for (u, v), spec in net.links.items():
+            fw_vals.add(transmission_time_s(fw, spec.bw_fw))
+            bw_vals.add(transmission_time_s(bw, spec.bw_bw))
+    cand_fw = sorted(t for t in fw_vals if t >= lb_fw)
+    cand_bw = sorted(t for t in bw_vals if t >= lb_bw)
+
+    pair0 = _capped_tour_jax(net, profile, request, enc, None, inv_M,
+                             use_pallas)
+    if pair0 is None:
+        return None
+    plan0, lb0 = pair0
+    best_pair, best_lat = pair0, lb0.total_s
+    fill_min = lb0.computation_s + lb0.transmission_s + lb0.propagation_s
+    tau_fw0, tau_bw0 = _fast_round_trip_taus(net, profile, request, plan0)
+
+    pairs = sorted(((F, B) for F in cand_fw for B in cand_bw),
+                   key=lambda p: (p[0] + p[1], p[0]))
+    for F, B in pairs:
+        if fill_min + c_bub * (F + B) >= best_lat:
+            break
+        if F >= tau_fw0 and B >= tau_bw0:
+            continue
+        pair_t = _capped_tour_jax_tr(net, profile, request, enc, F, B, inv_M,
+                                     use_pallas)
+        if pair_t is None:
+            continue
+        lat = pair_t[1].total_s
+        if lat < best_lat:
+            best_pair, best_lat = pair_t, lat
+    return best_pair
+
+
 def _dfts_jax_plan(net, profile, request, segments, cands,
                    use_pallas: bool = False
                    ) -> tuple[Plan, LatencyBreakdown] | None:
@@ -556,6 +779,9 @@ def _dfts_jax_plan(net, profile, request, segments, cands,
     returning the plan together with its (memoized) latency breakdown."""
     K = len(segments)
     if request.schedule == PIPE and request.microbatches() > 1:
+        if request.mode == TR:
+            return _dfts_jax_pipe_tr(net, profile, request, K, cands,
+                                     segments, use_pallas)
         return _dfts_jax_pipe(net, profile, request, K, cands, segments,
                               use_pallas)
     return _dfts_jax_seq(net, profile, request, K, cands, segments,
@@ -719,9 +945,86 @@ def _kseq_jax_pipe(net, profile, request, plan: Plan):
     return _segments_from_cuts(cuts, L)
 
 
+def _run_pipe_dp_jax(sfill, ssmax, valid, taus):
+    """``segmentation._pipe_dp_np`` on the jitted ``kseq_pipe_scan``: pads
+    the cap grid to a power of two with +inf caps (absorbing; the first
+    ``len(taus)`` columns stay aligned, as the shared driver requires) and
+    returns the dp row at [K, L] plus the scan's first-occurrence choice
+    lookup."""
+    L = sfill.shape[1] - 1
+    taus_pad = np.full(_pow2(max(taus.size, 1)), INF)
+    taus_pad[:taus.size] = taus
+    J = _jx()
+    with J.x64():
+        dp, choices = J.kseq_pipe_scan(
+            J.jnp.asarray(sfill), J.jnp.asarray(ssmax),
+            J.jnp.asarray(valid), J.jnp.asarray(taus_pad))
+        dp_KL = np.asarray(dp[L])
+        choices = np.asarray(choices)
+    return dp_KL, lambda k, e, t: int(choices[k - 2, e, t])
+
+
+def _kseq_jax_pipe_tr(net, profile, request, plan: Plan):
+    """`segmentation._k_seq_pipe_tr` with the inner DP on the jitted scan:
+    the (K, L+1, L+1) grids are rebuilt bit-identically from the memoized
+    dense tables, then the *shared* driver `_run_k_seq_pipe_tr` executes the
+    forward-cap scan — same control flow by construction, so segment choices
+    match the scalar oracle exactly (docs/training.md)."""
+    from .segmentation import _run_k_seq_pipe_tr
+
+    K, L = plan.K, profile.L
+    M = request.microbatches()
+    inv_M = 1.0 / M
+    c_bub = (M - 1) / M
+    b = request.batch_size
+    paths = plan.paths
+
+    comp = np.full((K, L + 1, L + 1), INF)
+    comp_fw = np.full((K, L + 1, L + 1), INF)
+    comp_bw = np.full((K, L + 1, L + 1), INF)
+    for k in range(K):
+        lo_min, hi_max = k + 1, L - (K - 1 - k)
+        w = slice(lo_min, hi_max + 1)
+        node = plan.placement[k]
+        comp[k, w, w] = _comp_fits_grid(net, profile, request, node)[w, w]
+        comp_fw[k, w, w] = _comp_fits_grid_dir(net, profile, request, node,
+                                               FW)[w, w]
+        comp_bw[k, w, w] = _comp_fits_grid_dir(net, profile, request, node,
+                                               BW)[w, w]
+
+    # shipping tables — segmentation._tr_stage_grids' exact loops
+    fw_b = np.array([b * profile.cut_bytes(c, FW) for c in range(1, L)])
+    bw_b = np.array([b * profile.cut_bytes(c, BW) for c in range(1, L)])
+    ship_sum = np.zeros((max(K - 1, 1), L + 1))
+    ship_prop = np.zeros(max(K - 1, 1))
+    ship_max_fw = np.zeros((max(K - 1, 1), L + 1))
+    ship_max_bw = np.zeros((max(K - 1, 1), L + 1))
+    for k in range(K - 1):
+        for u, v in zip(paths[k], paths[k][1:]):
+            spec = net.links[(u, v)]
+            t_fw = transmission_time_s(fw_b, spec.bw_fw)
+            t_bw = transmission_time_s(bw_b, spec.bw_bw)
+            ship_prop[k] += spec.delay_fw + spec.delay_bw
+            ship_sum[k, 1:L] += t_fw + t_bw
+            ship_max_fw[k, 1:L] = np.maximum(ship_max_fw[k, 1:L], t_fw)
+            ship_max_bw[k, 1:L] = np.maximum(ship_max_bw[k, 1:L], t_bw)
+
+    fill = comp * inv_M
+    sfmax = comp_fw.copy()
+    sbmax = comp_bw.copy()
+    for k in range(K - 1):
+        fill[k] = fill[k] + (ship_sum[k][None, :] * inv_M + ship_prop[k])
+        sfmax[k] = np.maximum(sfmax[k], ship_max_fw[k][None, :])
+        sbmax[k] = np.maximum(sbmax[k], ship_max_bw[k][None, :])
+    return _run_k_seq_pipe_tr(K, L, c_bub, fill, sfmax, sbmax,
+                              _run_pipe_dp_jax)
+
+
 def _kseq_jax(net, profile, request, plan: Plan):
     """JAX counterpart of k_sequence_segmentation (same dispatch)."""
     if request.schedule == PIPE and request.microbatches() > 1:
+        if request.mode == TR:
+            return _kseq_jax_pipe_tr(net, profile, request, plan)
         return _kseq_jax_pipe(net, profile, request, plan)
     return _kseq_jax_seq(net, profile, request, plan)
 

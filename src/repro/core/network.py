@@ -104,6 +104,15 @@ class PhysicalNetwork:
             t += transmission_time_s(bw_bytes, link.bw_bw)
         return t
 
+    def link_trans_dir_s(self, u: str, v: str, size_bytes: float,
+                         direction: str) -> float:
+        """Single-direction transmission time of one cut's smashed data on
+        link (u, v): the link's per-batch occupancy as a *forward* (activation)
+        or *backward* (gradient) pipeline stage in the round-trip training
+        model (docs/training.md)."""
+        link = self.links[(u, v)]
+        return transmission_time_s(size_bytes, link.rate(direction))
+
     def edge_cost(self, u: str, v: str, fw_bytes: float, bw_bytes: float | None,
                   trans_scale: float = 1.0) -> float:
         """Per-link chaining cost c^k_{i,j} (Sec. V-C): FW transfer (+ BW if
@@ -124,6 +133,7 @@ class PhysicalNetwork:
         bw_bytes: float | None,
         trans_cap: float | None = None,
         trans_scale: float = 1.0,
+        trans_cap_bw: float | None = None,
     ) -> tuple[dict[str, float], dict[str, str | None]]:
         """Multi-source Dijkstra with smashed-data-dependent link costs.
 
@@ -134,12 +144,23 @@ class PhysicalNetwork:
         ``trans_cap`` excludes links whose per-batch transmission time
         (``link_trans_s``) exceeds the cap — the bottleneck-capped searches of
         the pipelined solvers; ``trans_scale`` scales transmission (not
-        propagation) in the edge cost.  The defaults reproduce the sequential
-        behaviour exactly (scaling by 1.0 is an IEEE identity).
+        propagation) in the edge cost.  When ``trans_cap_bw`` is given
+        (round-trip training searches, docs/training.md) the caps are
+        *per-direction* instead: a link is excluded when its forward
+        (activation) occupancy exceeds ``trans_cap`` or its backward
+        (gradient) occupancy exceeds ``trans_cap_bw``; ``bw_bytes`` must then
+        be a concrete size.  The defaults reproduce the sequential behaviour
+        exactly (scaling by 1.0 is an IEEE identity).
         """
         adj: dict[str, list[tuple[str, float]]] = {n: [] for n in self.nodes}
-        for (u, v), _ in self.links.items():
-            if (trans_cap is not None
+        for (u, v), spec in self.links.items():
+            if trans_cap_bw is not None:
+                assert bw_bytes is not None
+                if (transmission_time_s(fw_bytes, spec.bw_fw) > trans_cap
+                        or transmission_time_s(bw_bytes, spec.bw_bw)
+                        > trans_cap_bw):
+                    continue
+            elif (trans_cap is not None
                     and self.link_trans_s(u, v, fw_bytes, bw_bytes) > trans_cap):
                 continue
             adj[u].append((v, self.edge_cost(u, v, fw_bytes, bw_bytes,
@@ -172,6 +193,7 @@ class PhysicalNetwork:
     def sssp(
         self, source: str, fw_bytes: float, bw_bytes: float | None,
         trans_cap: float | None = None, trans_scale: float = 1.0,
+        trans_cap_bw: float | None = None,
     ) -> tuple[dict[str, float], dict[str, str | None]]:
         """Cached single-source Dijkstra frontier for one smashed-data size.
 
@@ -182,11 +204,12 @@ class PhysicalNetwork:
         multi-source tour query — including the capped/scaled frontiers of the
         pipelined solvers' bottleneck scans.
         """
-        key = (source, fw_bytes, bw_bytes, trans_cap, trans_scale)
+        key = (source, fw_bytes, bw_bytes, trans_cap, trans_scale,
+               trans_cap_bw)
         hit = self._sssp_cache.get(key)
         if hit is None:
             hit = self.dijkstra({source: 0.0}, fw_bytes, bw_bytes,
-                                trans_cap, trans_scale)
+                                trans_cap, trans_scale, trans_cap_bw)
             self._sssp_cache[key] = hit
         return hit
 
@@ -223,6 +246,7 @@ class PhysicalNetwork:
     def frontier_matrix(
         self, sources: tuple[str, ...], fw_bytes: float, bw_bytes: float | None,
         trans_cap: float | None = None, trans_scale: float = 1.0,
+        trans_cap_bw: float | None = None,
     ) -> np.ndarray:
         """Dense [S, V] matrix of cached single-source frontiers.
 
@@ -233,13 +257,15 @@ class PhysicalNetwork:
         iterations, solver calls, and all requests of a serve admission round.
         Read-only; invalidated with the frontier cache on topology mutation.
         """
-        key = (sources, fw_bytes, bw_bytes, trans_cap, trans_scale)
+        key = (sources, fw_bytes, bw_bytes, trans_cap, trans_scale,
+               trans_cap_bw)
         mat = self._frontier_mats.get(key)
         if mat is None:
             idx = self.node_index()
             mat = np.full((len(sources), len(idx)), float("inf"))
             for r, s in enumerate(sources):
-                dist, _ = self.sssp(s, fw_bytes, bw_bytes, trans_cap, trans_scale)
+                dist, _ = self.sssp(s, fw_bytes, bw_bytes, trans_cap,
+                                    trans_scale, trans_cap_bw)
                 for n, d in dist.items():
                     mat[r, idx[n]] = d
             mat.setflags(write=False)

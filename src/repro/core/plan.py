@@ -13,6 +13,13 @@ Two execution schedules are supported (see docs/pipeline.md):
   pipeline fill (sum of per-microbatch stage times + all propagation) plus the
   drain term ``(M-1) * max_stage / M`` recorded as ``bubble_s``.  With M = 1
   this is bit-for-bit the sequential sum.
+
+Training requests (``mode=TR``) under ``pipe`` with M > 1 use the *round-trip*
+model of ``trainpipe.py`` (docs/training.md): the backward pass is a second
+pipeline wave over the reverse subpaths with its own ``delta^BW`` gradient
+sizes and per-direction stage times, and the drain term is
+``(M-1) * (tau_fw + tau_bw) / M``.  ``seq``+TR and every IF path are
+unaffected by that dispatch.
 """
 from __future__ import annotations
 
@@ -120,7 +127,9 @@ class EvalCache:
     __slots__ = ("comp", "fits", "hits", "misses")
 
     def __init__(self) -> None:
-        # keys: (node, lo, hi, batch_size, mode, schedule, n_microbatches)
+        # keys: (node, lo, hi, batch_size, mode, schedule, n_microbatches);
+        # per-direction round-trip entries (trainpipe.segment_comp_dir_s) use
+        # 8-tuples (node, lo, hi, direction, ...) — disjoint by length.
         self.comp: dict[tuple, float] = {}
         self.fits: dict[tuple, bool] = {}
         self.hits = 0
@@ -271,7 +280,14 @@ class PlanEvaluator:
 
     def evaluate(self, plan: Plan) -> LatencyBreakdown:
         if self.request.schedule == PIPE:
-            return self.evaluate_pipelined(plan, self.request.microbatches())
+            M = self.request.microbatches()
+            if self.request.mode == TR and M > 1:
+                # round-trip training pipeline (docs/training.md); M = 1
+                # stays on the fused path below — bit-equal to seq.
+                from .trainpipe import evaluate_round_trip
+
+                return evaluate_round_trip(self, plan, M)
+            return self.evaluate_pipelined(plan, M)
         out = LatencyBreakdown()
         for (lo, hi), node in zip(plan.segments, plan.placement):
             out.computation_s += self.segment_comp_s(node, lo, hi)

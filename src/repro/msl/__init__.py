@@ -1,5 +1,5 @@
 from .planner import PipelinePlan, group_profile, plan_pipeline
-from .simulator import ChainSimulator
+from .simulator import ChainSimulator, RoundTripResult
 from .pipeline import (
     make_pipeline_mesh,
     make_pipeline_train_step,
@@ -9,4 +9,5 @@ from .pipeline import (
 
 __all__ = ["PipelinePlan", "plan_pipeline", "group_profile",
            "make_pipeline_mesh", "make_pipeline_train_step",
-           "pipeline_forward", "stack_for_pipeline", "ChainSimulator"]
+           "pipeline_forward", "stack_for_pipeline", "ChainSimulator",
+           "RoundTripResult"]

@@ -7,6 +7,15 @@ Each stage's sub-model is the contiguous group range the plan assigns; smashed
 data is the actual residual-stream array handed from stage to stage (the
 paper's Fig. 1 forward walk).  Measured compute times per node feed the
 StepTimeCalibrator (ft/manager.py), closing the paper's OLS calibration loop.
+
+Training chains get a full round trip (:meth:`ChainSimulator.round_trip`):
+the forward walk captures per-stage VJP pullbacks, then a REAL backward wave
+replays them in reverse chain order, handing the gradient cotangent back over
+each subpath's backward channel (``delta^BW`` sizes, ``bw_bw``/``delay_bw``).
+:meth:`ChainSimulator.executed_round_trip_s` replays the same per-resource
+charged times through a discrete-event GPipe F-then-B microbatch schedule —
+an independent reconstruction that validates ``trainpipe.evaluate_round_trip``
+(docs/training.md) against an executed chain rather than against itself.
 """
 from __future__ import annotations
 
@@ -18,7 +27,9 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..core import FW, BW, PlanEvaluator, ServiceChainRequest
+from ..core.network import transmission_time_s
 from ..core.plan import Plan
+from ..core.trainpipe import segment_comp_dir_s
 from ..models import transformer as T
 from ..models.layers import Ctx
 
@@ -32,6 +43,7 @@ class StageTrace:
     compute_s_predicted: float
     transfer_s_charged: float
     smashed_bytes: float
+    direction: str = FW
 
 
 @dataclass
@@ -43,6 +55,29 @@ class ChainResult:
     def total_charged_s(self) -> float:
         return sum(t.compute_s_predicted + t.transfer_s_charged
                    for t in self.traces)
+
+    @property
+    def total_measured_compute_s(self) -> float:
+        return sum(t.compute_s_measured for t in self.traces)
+
+
+@dataclass
+class RoundTripResult:
+    """Executed forward + backward chain walk: the forward traces in chain
+    order followed by the backward traces in reverse chain order, plus the
+    gradient handed back to the chain's source (the paper's reverse-path
+    smashed flow)."""
+
+    hidden: jnp.ndarray
+    grad_in: jnp.ndarray
+    traces: list[StageTrace] = field(default_factory=list)
+
+    def charged_s(self, direction: str | None = None) -> float:
+        """Sum of charged (predicted compute + transfer) time, optionally
+        restricted to one direction — the executed chain's decomposition."""
+        return sum(t.compute_s_predicted + t.transfer_s_charged
+                   for t in self.traces
+                   if direction is None or t.direction == direction)
 
     @property
     def total_measured_compute_s(self) -> float:
@@ -110,3 +145,141 @@ class ChainSimulator:
     def run_plan(self, plan: Plan, tokens) -> ChainResult:
         self.plan = plan
         return self.forward(tokens)
+
+    # ------------------------------------------------------------- round trip
+    def _dir_transfer_s(self, path, cut_after: int,
+                        direction: str) -> tuple[float, float]:
+        """(transmission, propagation) of the cut's smashed data in ONE
+        direction.  Backward gradients are charged on the same directed links'
+        backward channels (the R^BW convention of Eq. 7 / serve residuals)."""
+        nbytes = (self.ev.request.batch_size
+                  * self.ev.profile.cut_bytes(cut_after, direction))
+        trans = prop = 0.0
+        for u, v in zip(path, path[1:]):
+            link = self.ev.net.links[(u, v)]
+            trans += transmission_time_s(nbytes, link.rate(direction))
+            prop += link.delay(direction)
+        return trans, prop
+
+    def round_trip(self, plan: Plan, tokens) -> RoundTripResult:
+        """Execute the full training round trip on the placed chain.
+
+        The forward walk runs each stage under ``jax.vjp``, keeping the
+        pullback; the backward wave then replays the pullbacks in reverse
+        chain order, handing the REAL gradient cotangent stage k -> k-1 over
+        subpath k-1's backward channel.  Each trace charges the single
+        direction's predicted compute (``trainpipe.segment_comp_dir_s``) and
+        transfer, so ``charged_s(FW) + charged_s(BW)`` is the executed
+        chain's decomposition of the sequential round trip.
+        """
+        self.plan = plan
+        x = T.embed_tokens(self.params, self.cfg, tokens)
+        result = RoundTripResult(hidden=x, grad_in=jnp.zeros_like(x))
+        pullbacks = []
+        for k, ((lo, hi), node) in enumerate(zip(plan.segments,
+                                                 plan.placement)):
+            fn = self._stage_fn(lo, hi)
+            t0 = time.perf_counter()
+            x, pull = jax.vjp(lambda h: fn(self.params["stack"], h), x)
+            x = jax.block_until_ready(x)
+            measured = time.perf_counter() - t0
+            pullbacks.append(pull)
+            trans = prop = smashed = 0.0
+            if k < plan.K - 1:
+                trans, prop = self._dir_transfer_s(plan.paths[k],
+                                                   plan.segments[k][1], FW)
+                smashed = float(x.size * x.dtype.itemsize)
+            result.traces.append(StageTrace(
+                stage=k, node=node, groups=(lo, hi),
+                compute_s_measured=measured,
+                compute_s_predicted=segment_comp_dir_s(self.ev, node, lo, hi,
+                                                       FW),
+                transfer_s_charged=trans + prop, smashed_bytes=smashed,
+                direction=FW))
+        result.hidden = x
+        g = jnp.ones_like(x)  # cotangent seed at the chain destination
+        for k in range(plan.K - 1, -1, -1):
+            (lo, hi), node = plan.segments[k], plan.placement[k]
+            t0 = time.perf_counter()
+            (g,) = pullbacks[k](g)
+            g = jax.block_until_ready(g)
+            measured = time.perf_counter() - t0
+            trans = prop = smashed = 0.0
+            if k > 0:  # gradient ships back over subpath k-1
+                trans, prop = self._dir_transfer_s(plan.paths[k - 1],
+                                                   plan.segments[k - 1][1], BW)
+                smashed = float(g.size * g.dtype.itemsize)
+            result.traces.append(StageTrace(
+                stage=k, node=node, groups=(lo, hi),
+                compute_s_measured=measured,
+                compute_s_predicted=segment_comp_dir_s(self.ev, node, lo, hi,
+                                                       BW),
+                transfer_s_charged=trans + prop, smashed_bytes=smashed,
+                direction=BW))
+        result.grad_in = g
+        return result
+
+    def executed_round_trip_s(self, plan: Plan, n_microbatches: int) -> float:
+        """Discrete-event GPipe F-then-B replay of the charged chain — see
+        the module-level :func:`executed_round_trip_s` (needs only the plan
+        evaluator, so tests can replay NSFNET plans without a jax model)."""
+        return executed_round_trip_s(self.ev, plan, n_microbatches)
+
+
+def executed_round_trip_s(ev, plan: Plan, n_microbatches: int) -> float:
+    """Discrete-event GPipe F-then-B replay of the charged chain.
+
+    Every pipeline resource (hosting node per direction, physical link
+    channel per direction) serves microbatches FIFO at its full-batch
+    time / M; propagation delays microbatches without occupying the
+    resource; the backward phase releases only when the forward phase has
+    fully drained (the F-then-B barrier of ``msl/pipeline.py``).  The
+    makespan is an independently-computed executed latency that
+    ``trainpipe.evaluate_round_trip``'s closed form must match (the
+    classic flow-shop identity sum + (M-1)*bottleneck, per direction) —
+    tests assert agreement to 1e-9 relative.
+    """
+    M = n_microbatches
+    b = ev.request.batch_size
+
+    res_fw: list[tuple[float, float]] = []  # (full-batch service, prop)
+    for k, ((lo, hi), node) in enumerate(zip(plan.segments,
+                                             plan.placement)):
+        res_fw.append((segment_comp_dir_s(ev, node, lo, hi, FW), 0.0))
+        if k < plan.K - 1:
+            fw_bytes = b * ev.profile.cut_bytes(plan.segments[k][1], FW)
+            for u, v in zip(plan.paths[k], plan.paths[k][1:]):
+                link = ev.net.links[(u, v)]
+                res_fw.append((transmission_time_s(fw_bytes, link.bw_fw),
+                               link.delay_fw))
+    res_bw: list[tuple[float, float]] = []
+    for k in range(plan.K - 1, -1, -1):
+        (lo, hi), node = plan.segments[k], plan.placement[k]
+        res_bw.append((segment_comp_dir_s(ev, node, lo, hi, BW), 0.0))
+        if k > 0:
+            path = plan.paths[k - 1]
+            bw_bytes = b * ev.profile.cut_bytes(plan.segments[k - 1][1],
+                                                BW)
+            for u, v in reversed(list(zip(path, path[1:]))):
+                link = ev.net.links[(u, v)]
+                res_bw.append((transmission_time_s(bw_bytes, link.bw_bw),
+                               link.delay_bw))
+    tail_prop = 0.0
+    if plan.tail_path:  # psi_K = 0: forward propagation only
+        _, tail_prop = ev.net.path_cost_breakdown(plan.tail_path, 0.0,
+                                                  None)
+
+    def phase(resources: list[tuple[float, float]], release: float) -> float:
+        avail = [release] * len(resources)
+        done = release
+        for _ in range(M):
+            t = release
+            for i, (service, prop) in enumerate(resources):
+                start = max(t, avail[i])
+                avail[i] = start + service / M
+                t = avail[i] + prop
+            done = t
+        return done
+
+    barrier = phase(res_fw, 0.0)  # all M forwards drained at the last node
+    return phase(res_bw, barrier) + tail_prop

@@ -41,6 +41,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--batch-size", type=int, default=2,
                     help="base batch size (spread x1/x2/x4 across the fleet)")
     ap.add_argument("--mode", default="IF", choices=("IF", "TR"))
+    ap.add_argument("--train-share", type=float, default=0.0,
+                    help="fraction of the fleet drawn as TR training chains "
+                         "(overrides --mode per request; a dedicated seeded "
+                         "stream keeps arrivals identical to the all-IF twin)")
     ap.add_argument("--K", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--arrival", default="batch", choices=ARRIVALS)
@@ -111,6 +115,8 @@ def main(argv: list[str] | None = None) -> int:
                  "--sim or --gateway")
     if args.failure_rate < 0:
         ap.error("--failure-rate must be >= 0")
+    if not 0.0 <= args.train_share <= 1.0:
+        ap.error("--train-share must be in [0, 1]")
     # No batch_size: the fleet's batch spread means some requests may pipeline
     # deeper than the base batch clamps, so check the unclamped depth.
     ok, reason = solver_supports(args.solver, schedule=args.schedule,
@@ -133,7 +139,7 @@ def main(argv: list[str] | None = None) -> int:
         hold_model=args.hold_model,
         hold_time_s=(args.duration_s if args.duration_s is not None
                      else float("inf")),
-        ha=args.ha)
+        ha=args.ha, train_share=args.train_share)
     failures = None
     if args.failure_rate > 0:
         horizon = (max(r.arrival_s for r in fleet)

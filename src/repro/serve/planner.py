@@ -129,6 +129,33 @@ class ServeOutcome:
             "n_presolved": self.n_presolved,
         }
 
+    def mode_split(self) -> dict:
+        """Per-mode (IF vs TR) admission breakdown of the round: how training
+        and inference chains fared under shared-fabric contention
+        (docs/training.md).  Keys are the modes present in the fleet; each
+        carries the per-mode acceptance and latency percentiles the mixed
+        training sweep reports on."""
+        by_mode: dict[str, list[ServedRequest]] = {}
+        for s in self.served:
+            by_mode.setdefault(s.request.mode, []).append(s)
+        out: dict[str, dict] = {}
+        for m in sorted(by_mode):
+            rows = by_mode[m]
+            lats = sorted(s.latency_s for s in rows
+                          if s.accepted and s.latency_s is not None)
+            arr = np.asarray(lats) if lats else None
+            n_acc = sum(s.accepted for s in rows)
+            out[m] = {
+                "n_requests": len(rows),
+                "n_accepted": n_acc,
+                "acceptance_ratio": n_acc / len(rows),
+                "latency_mean_s": float(np.mean(arr)) if lats else None,
+                **{f"latency_p{int(q)}_s":
+                   (float(np.percentile(arr, q)) if lats else None)
+                   for q in (50, 95, 99)},
+            }
+        return out
+
 
 class ServePlanner:
     """Admits fleets of :class:`ServeRequest` onto one `PhysicalNetwork`."""

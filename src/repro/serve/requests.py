@@ -108,6 +108,7 @@ def generate_fleet(
     hold_model: str = "none",
     hold_time_s: float = INF,
     ha: bool = False,
+    train_share: float = 0.0,
 ) -> list[ServeRequest]:
     """Deterministic seeded fleet of `n_requests` chains on one fabric.
 
@@ -118,6 +119,13 @@ def generate_fleet(
     holding time from `hold_model` (see :data:`HOLD_MODELS`).  Holding times
     are drawn from a *dedicated* seeded stream, so a churn fleet and its
     ``hold_model="none"`` counterpart share identical arrivals/candidates.
+
+    ``train_share > 0`` mixes training into the fleet: each request is TR
+    with that probability (IF otherwise), overriding `mode`, drawn from its
+    own dedicated seeded stream — the arrival/holding/candidate streams are
+    untouched, so a mixed fleet and its all-IF (``train_share=0``) twin see
+    identical arrival processes, and raising the share only flips individual
+    requests IF -> TR (per-request draws are share-monotone).
     """
     if arrival not in ARRIVALS:
         raise ValueError(f"arrival must be one of {ARRIVALS}, got {arrival!r}")
@@ -127,8 +135,11 @@ def generate_fleet(
     if hold_model != "none" and not (hold_time_s > 0 and math.isfinite(hold_time_s)):
         raise ValueError(f"hold_model={hold_model!r} needs a positive finite "
                          f"hold_time_s, got {hold_time_s!r}")
+    if not 0.0 <= train_share <= 1.0:
+        raise ValueError(f"train_share must be in [0, 1], got {train_share!r}")
     rng = random.Random(seed)
     hold_rng = random.Random(seed * 7919 + 1)  # independent of the arrival stream
+    mode_rng = random.Random(seed * 5557 + 3)  # independent mode-mixing stream
     nodes = sorted(net.nodes)
     fleet = []
     t = 0.0
@@ -141,6 +152,9 @@ def generate_fleet(
             duration = hold_time_s
         else:  # "exp"
             duration = hold_rng.expovariate(1.0 / hold_time_s)
+        req_mode = mode
+        if train_share > 0.0:
+            req_mode = TR if mode_rng.random() < train_share else IF
         if candidates is not None:
             cands = candidates
         else:
@@ -151,7 +165,7 @@ def generate_fleet(
             source=source,
             destination=destination,
             batch_size=batch_size * batch_spread[i % len(batch_spread)],
-            mode=mode,
+            mode=req_mode,
             K=K,
             candidates=tuple(tuple(c) for c in cands),
             arrival_s=t,

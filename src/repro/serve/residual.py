@@ -29,7 +29,8 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 
 from repro.core import (BW, FW, TR, EvalCache, LinkSpec, ModelProfile,
-                        NodeSpec, PhysicalNetwork, Plan, PlanEvaluator)
+                        NodeSpec, PhysicalNetwork, Plan, PlanEvaluator,
+                        round_trip_bottleneck_s)
 
 from .requests import ServeRequest
 
@@ -80,13 +81,19 @@ def effective_rate_rps(profile: ModelProfile, request: ServeRequest,
     (M > 1) streams microbatches through its bottleneck stage tau, completing
     at most one batch per tau seconds regardless of M, so its steady-state
     link occupancy corresponds to ``min(rate_rps, 1/tau)`` — reserving more
-    would hold bandwidth the chain can physically never use.  tau is computed
-    against the *base* fabric's compute/link models so the reservation is
-    stable across residual views."""
+    would hold bandwidth the chain can physically never use.  A pipelined
+    *training* chain's steady-state period is the round-trip
+    ``tau_fw + tau_bw`` (the bottleneck stage runs one forward and one
+    backward pass per microbatch — docs/training.md), so its clamp is
+    ``min(rate_rps, 1/(tau_fw + tau_bw))``.  tau is computed against the
+    *base* fabric's compute/link models so the reservation is stable across
+    residual views."""
     chain = request.chain_request()
     if chain.microbatches() <= 1:
         return request.rate_rps
-    tau = PlanEvaluator(net, profile, chain, cache=cache).bottleneck_s(plan)
+    ev = PlanEvaluator(net, profile, chain, cache=cache)
+    tau = (round_trip_bottleneck_s(ev, plan) if chain.mode == TR
+           else ev.bottleneck_s(plan))
     if tau <= 0.0:
         return request.rate_rps
     return min(request.rate_rps, 1.0 / tau)

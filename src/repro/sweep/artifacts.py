@@ -38,6 +38,11 @@ CSV_FIELDS = [
     # substrate failures + live migration (docs/failures.md); empty otherwise
     "failure_rate", "ha", "n_failed", "n_restored", "restore_p95_s",
     "moved_bytes",
+    # mixed training fleets (docs/training.md); empty for pure-mode fleets
+    "train_share", "tr_n_requests", "tr_n_accepted", "tr_acceptance_ratio",
+    "tr_latency_p50_s", "tr_latency_p95_s", "tr_latency_p99_s",
+    "if_n_requests", "if_n_accepted", "if_acceptance_ratio",
+    "if_latency_p50_s", "if_latency_p95_s", "if_latency_p99_s",
 ]
 
 
@@ -132,6 +137,14 @@ def write_artifacts(out_dir: str | Path, suite_name: str,
                 "n_restored": _opt(r.n_restored),
                 "restore_p95_s": _opt(r.restore_p95_s),
                 "moved_bytes": _opt(r.moved_bytes),
+                "train_share": _opt(s.train_share if s.n_requests > 1
+                                    else None),
+                **{f"{m.lower()}_{col}": _opt(
+                    (r.mode_split or {}).get(m, {}).get(col))
+                   for m in ("TR", "IF")
+                   for col in ("n_requests", "n_accepted", "acceptance_ratio",
+                               "latency_p50_s", "latency_p95_s",
+                               "latency_p99_s")},
             })
     return {"json": json_path, "csv": csv_path}
 

@@ -103,6 +103,48 @@ def churn_pairs(results: list[ScenarioResult]) -> dict[str, dict]:
     return pairs
 
 
+def training_rows(results: list[ScenarioResult]) -> list[dict]:
+    """One train/inference contention row per mixed training fleet
+    (``spec.train_share > 0``, docs/training.md): the per-mode acceptance and
+    latency percentiles recorded by the run, plus — when the suite also swept
+    the ``train_share=0`` twin (identical arrivals/candidates by stream
+    construction, pairing on :meth:`ScenarioSpec.training_key`) — the all-IF
+    acceptance and the contention cost ``if_acceptance_delta`` (how many
+    acceptance-ratio points the *inference* side lost to sharing the fabric
+    with training chains)."""
+    twin_by_key: dict[str, ScenarioResult] = {}
+    for r in results:
+        if (r.spec.n_requests > 1 and r.spec.train_share == 0.0
+                and r.error is None and r.acceptance_ratio is not None):
+            twin_by_key[r.spec.training_key()] = r
+    rows = []
+    for r in results:
+        s = r.spec
+        if s.train_share <= 0.0 or r.error is not None:
+            continue
+        split = r.mode_split or {}
+        row = {
+            "scenario_id": s.scenario_id(),
+            "cell": s.tags.get("cell", ""),
+            "profile": s.profile,
+            "arch": (s.profile_kwargs or {}).get("arch", s.profile),
+            "solver": s.solver,
+            "train_share": s.train_share,
+            "n_requests": s.n_requests,
+            "acceptance_ratio": r.acceptance_ratio,
+            "mode_split": split,
+        }
+        twin = twin_by_key.get(s.training_key())
+        if twin is not None:
+            row["all_if_acceptance"] = twin.acceptance_ratio
+            if_split = split.get("IF")
+            if if_split is not None and twin.acceptance_ratio is not None:
+                row["if_acceptance_delta"] = (if_split["acceptance_ratio"]
+                                              - twin.acceptance_ratio)
+        rows.append(row)
+    return rows
+
+
 def failure_rows(results: list[ScenarioResult]) -> list[dict]:
     """One survivability row per failure-injected scenario (docs/failures.md):
     how many committed chains a substrate event took down, how many came back
@@ -293,10 +335,31 @@ def comparison_report(results: list[ScenarioResult]) -> dict:
             "moved_bytes": sum(row["moved_bytes"] or 0.0 for row in frows),
             "rows": frows,
         }
+    trows = training_rows(results)
+    training_cmp = None
+    if trows:
+        def _mode_totals(mode: str) -> tuple[int, int]:
+            n = sum(row["mode_split"].get(mode, {}).get("n_requests", 0)
+                    for row in trows)
+            acc = sum(row["mode_split"].get(mode, {}).get("n_accepted", 0)
+                      for row in trows)
+            return n, acc
+
+        n_tr, acc_tr = _mode_totals("TR")
+        n_if, acc_if = _mode_totals("IF")
+        training_cmp = {
+            "n_scenarios": len(trows),
+            "n_train_requests": n_tr,
+            "train_acceptance": (acc_tr / n_tr) if n_tr else None,
+            "n_inference_requests": n_if,
+            "inference_acceptance": (acc_if / n_if) if n_if else None,
+            "rows": trows,
+        }
     return {"n_groups": len(per_group), "summary": summary,
             "schedule_comparison": schedule_cmp,
             "churn_comparison": churn_cmp,
-            "failure_survivability": failure_cmp, "groups": per_group}
+            "failure_survivability": failure_cmp,
+            "training_contention": training_cmp, "groups": per_group}
 
 
 def format_report(report: dict) -> str:
@@ -363,4 +426,29 @@ def format_report(report: dict) -> str:
                 f"{'ha ' if row['ha'] else '   '}"
                 f"hit {row['n_failed']:>2} restored {row['n_restored']:>2} "
                 f"killed {row['n_killed']:>2} (surv {sv})")
+    tc = report.get("training_contention")
+    if tc:
+        ta = ("-" if tc["train_acceptance"] is None
+              else f"{tc['train_acceptance']:.2f}")
+        ia = ("-" if tc["inference_acceptance"] is None
+              else f"{tc['inference_acceptance']:.2f}")
+        lines.append(
+            f"training contention: {tc['n_scenarios']} mixed fleets, "
+            f"TR accept {ta} ({tc['n_train_requests']} reqs), "
+            f"IF accept {ia} ({tc['n_inference_requests']} reqs)")
+        for row in sorted(tc["rows"],
+                          key=lambda x: (x["cell"], x["train_share"])):
+            parts = []
+            for m in ("TR", "IF"):
+                ms = row["mode_split"].get(m)
+                if ms is None:
+                    continue
+                p95 = ms.get("latency_p95_s")
+                p95s = "-" if p95 is None else f"{p95 * 1e3:.1f}ms"
+                parts.append(f"{m} {ms['n_accepted']}/{ms['n_requests']} "
+                             f"p95 {p95s}")
+            delta = row.get("if_acceptance_delta")
+            tail = "" if delta is None else f" (IF delta {delta:+.2f})"
+            lines.append(f"  {row['cell']:<20} share {row['train_share']:<4} "
+                         + ", ".join(parts) + tail)
     return "\n".join(lines)

@@ -65,6 +65,9 @@ class ScenarioResult:
     latency_p95_s: float | None = None
     latency_p99_s: float | None = None
     served: list | None = None  # per-request admission records
+    # per-mode (IF vs TR) admission breakdown of mixed training fleets
+    # (docs/training.md): acceptance + latency percentiles split by mode
+    mode_split: dict | None = None
     # event-driven sim scenarios (spec.sim, docs/sim.md)
     blocking_probability: float | None = None
     peak_concurrent: int | None = None
@@ -176,6 +179,7 @@ def _run_serve_scenario(spec: ScenarioSpec, net, profile, cache) -> ScenarioResu
         latency_p95_s=s["latency_p95_s"],
         latency_p99_s=s["latency_p99_s"],
         served=[sr.to_dict() for sr in outcome.served],
+        mode_split=outcome.mode_split(),
     )
     cs = outcome.cache_stats or {}
     res.eval_cache_hit_rate = cs.get("eval_cache", {}).get("hit_rate")

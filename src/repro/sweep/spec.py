@@ -34,12 +34,14 @@ from repro.core import (
 from repro.serve.policies import POLICY_NAMES
 from repro.serve.requests import ARRIVALS, HOLD_MODELS
 
-# v7: failure events + live migration (failure_rate/failure_downtime_s/
+# v8: training as a first-class regime (train_share mixed fleets, mode-split
+# contention columns, round-trip TR-pipe latencies — docs/training.md); v7:
+# failure events + live migration (failure_rate/failure_downtime_s/
 # failures/ha knobs, survivability columns); v6: serving gateway (gateway/
 # batch_window_s/max_queue/slo_latency_s knobs, cache hit-rate columns); v5:
 # event-driven serving sim (sim/hold_model/duration_s/retry knobs, churn
 # metrics + error capture in results); v4: engine dispatch (status + stats)
-SUITE_SCHEMA_VERSION = 7
+SUITE_SCHEMA_VERSION = 8
 
 # ------------------------------------------------------------------ topologies
 TOPOLOGIES = {
@@ -139,6 +141,11 @@ class ScenarioSpec:
     n_requests: int = 1
     arrival: str = "batch"  # batch | poisson
     policy: str = "fcfs"  # admission policy (repro.serve.policies)
+    # Mixed training fleets (docs/training.md): each request is TR with this
+    # probability (IF otherwise), overriding `mode`, from a dedicated seeded
+    # stream — a mixed fleet and its train_share=0 twin share identical
+    # arrivals/candidates/holds, pairing on ``training_key()``.
+    train_share: float = 0.0
     # Event-driven serving sim (repro.serve.sim, docs/sim.md): sim=True runs
     # the fleet through ServeSim instead of one static admission round.
     sim: bool = False
@@ -186,6 +193,13 @@ class ScenarioSpec:
             raise ValueError(f"policy must be one of {POLICY_NAMES}")
         if self.hold_model not in HOLD_MODELS:
             raise ValueError(f"hold_model must be one of {HOLD_MODELS}")
+        if not 0.0 <= self.train_share <= 1.0:
+            raise ValueError(f"train_share must be in [0, 1], "
+                             f"got {self.train_share!r}")
+        if self.train_share > 0.0 and self.n_requests < 2:
+            raise ValueError("train_share mixes modes across a fleet; it "
+                             "requires n_requests > 1 (set mode=TR for a "
+                             "single training chain)")
         if self.sim and self.n_requests < 2:
             raise ValueError("sim=True needs a fleet (n_requests > 1)")
         if self.gateway:
@@ -292,6 +306,16 @@ class ScenarioSpec:
             d.pop(f, None)
         return json.dumps(d, sort_keys=True, separators=(",", ":"))
 
+    def training_key(self) -> str:
+        """Canonical key of everything *except* ``train_share`` — a mixed
+        training fleet and its all-IF twin (identical arrivals, candidates,
+        and holding times by stream construction) share this key, which is
+        what the report's training-contention pairing uses."""
+        d = self.to_dict()
+        for f in ("name", "tags", "train_share"):
+            d.pop(f, None)
+        return json.dumps(d, sort_keys=True, separators=(",", ":"))
+
     def churn_key(self) -> str:
         """Canonical key of everything *except* the churn knobs — a sim
         scenario and its static counterpart (identical fleet, solver, and
@@ -360,7 +384,7 @@ class ScenarioSpec:
             hold_model=self.hold_model,
             hold_time_s=(self.duration_s if self.duration_s is not None
                          else float("inf")),
-            ha=self.ha)
+            ha=self.ha, train_share=self.train_share)
 
     def build_failures(self, net: PhysicalNetwork, fleet) -> list:
         """The scenario's substrate-failure schedule (docs/failures.md):

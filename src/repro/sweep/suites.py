@@ -345,6 +345,62 @@ def nsfnet_gateway(quick: bool = False,
     return specs
 
 
+def nsfnet_mixed_training(quick: bool = False,
+                          shares: tuple[float, ...] | None = None,
+                          archs: tuple[tuple[str, dict], ...] | None = None,
+                          policies: tuple[str, ...] = ("fcfs",),
+                          schemes: tuple[str, ...] = ("bcd",),
+                          n_microbatches: int = 4) -> list[ScenarioSpec]:
+    """Mixed training/inference fleets on NSFNET (docs/training.md): every
+    cell is one Poisson fleet admitted at several ``train_share`` values —
+    each request is drawn TR (a round-trip pipelined training chain whose
+    gradients occupy the links' backward channels) or IF from a dedicated
+    seeded stream, so the ``share 0`` anchor is bit-for-bit the all-IF fleet
+    and every mixed variant sees identical arrivals/candidates, pairing on
+    ``ScenarioSpec.training_key()``.  Fleets are heterogeneous across the
+    model zoo: the paper's ResNet101 profile plus pattern-group train-mode
+    profiles of the assigned architectures that *fit* NSFNET's 2 GiB edge
+    nodes (the SSM and encoder-decoder members; the multi-GB LLMs belong to
+    the ``tpu_pod`` suite).  All chains run the pipelined schedule
+    (M = ``n_microbatches``), so TR admissions price the two-bottleneck round
+    trip — the report's ``training_contention`` section and the CSV's
+    mode-split columns come from this suite."""
+    if shares is None:
+        shares = (0.0, 0.5) if quick else (0.0, 0.25, 0.5, 0.75)
+    if archs is None:
+        zoo = [("mamba2-370m", 256)] if quick else [
+            ("mamba2-370m", 1024), ("whisper-small", 1500)]
+        archs = (("resnet101", {}),) + tuple(
+            ("group", {"arch": a, "seq_len": s, "mode": "train"})
+            for a, s in zoo)
+    fleets = [8] if quick else [8, 16, 32]
+    seeds = 1 if quick else 3
+    specs = []
+    for profile, prof_kwargs in archs:
+        label = prof_kwargs.get("arch", profile)
+        for n in fleets:
+            for policy in policies:
+                for solver in schemes:
+                    for seed in range(seeds):
+                        for share in shares:
+                            specs.append(ScenarioSpec(
+                                topology="nsfnet",
+                                topology_kwargs={"source": SOURCE},
+                                profile=profile, profile_kwargs=prof_kwargs,
+                                source=SOURCE, destination=DEST,
+                                batch_size=2, mode=IF, K=3, solver=solver,
+                                candidate_seed=seed, n_requests=n,
+                                arrival="poisson", policy=policy,
+                                schedule="pipe",
+                                n_microbatches=n_microbatches,
+                                train_share=share,
+                                tags={"suite": "nsfnet_mixed_training",
+                                      "seed": seed, "arch": label,
+                                      "cell": f"{label}_n{n}_{policy}",
+                                      "train_share": share}))
+    return specs
+
+
 def random_load_scaling(quick: bool = False,
                         policies: tuple[str, ...] = ("fcfs", "latency-greedy")
                         ) -> list[ScenarioSpec]:
@@ -380,5 +436,6 @@ SUITES = {
     "nsfnet_churn": nsfnet_churn,
     "nsfnet_failures": nsfnet_failures,
     "nsfnet_gateway": nsfnet_gateway,
+    "nsfnet_mixed_training": nsfnet_mixed_training,
     "random_load_scaling": random_load_scaling,
 }

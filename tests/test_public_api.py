@@ -28,6 +28,9 @@ CORE_ALL_SNAPSHOT = (
     "even_split", "segments_from_sizes", "cuts_from_segments",
     "validate_segments",
     "transmission_time_s", "tpu_group_compute_model",
+    # round-trip training pipelines (docs/training.md)
+    "evaluate_round_trip", "round_trip_stage_times", "round_trip_taus",
+    "round_trip_bottleneck_s", "segment_comp_dir_s",
 )
 
 

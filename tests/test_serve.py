@@ -345,3 +345,50 @@ def test_solver_stats_surface_cache_counters():
     pstats = again.solver_stats()["cache"]["plan_cache"]
     assert pstats["hits"] >= len({r.solve_key(NET, PROF) for r in fleet})
     assert pstats["hit_rate"] > 0.0
+
+
+# ------------------------------------------------- mixed training fleets (TR)
+def test_generate_fleet_train_share_twin_stability():
+    """A mixed fleet and its all-IF twin draw modes from a dedicated RNG
+    stream: arrivals, batch sizes, rates, and candidate sets are identical
+    request for request — only the mode flips (docs/training.md)."""
+    kw = dict(seed=3, arrival="poisson", arrival_rate_rps=4.0)
+    base = _fleet(16, **kw)
+    mixed = _fleet(16, train_share=0.5, **kw)
+    assert len(base) == len(mixed) == 16
+    for a, b in zip(base, mixed):
+        assert (a.arrival_s, a.batch_size, a.rate_rps, a.candidates) == \
+            (b.arrival_s, b.batch_size, b.rate_rps, b.candidates)
+    assert {r.mode for r in base} == {IF}
+    modes = [r.mode for r in mixed]
+    assert TR in modes and IF in modes  # 16 draws at p=.5: both present
+
+
+def test_generate_fleet_train_share_monotone_and_extremes():
+    def n_tr(share):
+        return sum(r.mode == TR
+                   for r in _fleet(32, seed=7, train_share=share))
+
+    counts = [n_tr(s) for s in (0.0, 0.25, 0.5, 0.75, 1.0)]
+    # same seed => same uniform draws => flips are monotone in the share
+    assert counts == sorted(counts)
+    assert counts[0] == 0 and counts[-1] == 32
+    with pytest.raises(ValueError):
+        _fleet(8, train_share=1.5)
+
+
+def test_mode_split_reports_per_mode_contention():
+    fleet = _fleet(10, seed=1, train_share=0.5, schedule="pipe",
+                   n_microbatches=4)
+    out = ServePlanner(NET, PROF).admit(fleet)
+    split = out.mode_split()
+    assert set(split) == {r.mode for r in fleet}
+    assert sum(m["n_requests"] for m in split.values()) == 10
+    assert sum(m["n_accepted"] for m in split.values()) == out.n_accepted
+    for m, row in split.items():
+        n = sum(r.mode == m for r in fleet)
+        assert row["n_requests"] == n
+        assert row["acceptance_ratio"] == pytest.approx(
+            row["n_accepted"] / n)
+        if row["n_accepted"]:
+            assert row["latency_p50_s"] <= row["latency_p95_s"] + 1e-12

@@ -255,3 +255,65 @@ def test_all_suites_build():
         assert specs, name
         for s in specs:
             assert ScenarioSpec.from_dict(s.to_dict()) == s
+
+
+# ------------------------------------------------ mixed training fleets (v8)
+def test_train_share_validation_and_twin_key():
+    serve = dict(n_requests=6, arrival="poisson", policy="fcfs")
+    with pytest.raises(ValueError):
+        _spec(train_share=1.5, **serve)
+    with pytest.raises(ValueError):
+        _spec(train_share=0.5)  # single-chain scenario has no fleet to mix
+    mixed = _spec(train_share=0.5, **serve)
+    twin = _spec(train_share=0.0, **serve)
+    # training_key pairs a mixed fleet with its all-IF twin and nothing else
+    assert mixed.training_key() == twin.training_key()
+    assert mixed.spec_hash() != twin.spec_hash()
+    assert mixed.training_key() != _spec(
+        train_share=0.5, n_requests=8, arrival="poisson",
+        policy="fcfs").training_key()
+    clone = ScenarioSpec.from_dict(mixed.to_dict())
+    assert clone == mixed and clone.train_share == 0.5
+
+
+def test_mixed_training_suite_pairs_every_cell_with_if_twin():
+    from repro.sweep import SUITES
+
+    specs = SUITES["nsfnet_mixed_training"](quick=True)
+    assert specs
+    by_key: dict[str, set[float]] = {}
+    for s in specs:
+        assert s.schedule == "pipe" and s.n_microbatches > 1
+        by_key.setdefault(s.training_key(), set()).add(s.train_share)
+    for shares in by_key.values():
+        assert 0.0 in shares and len(shares) > 1  # every cell has its twin
+
+
+def test_training_contention_report_and_csv_columns(tmp_path):
+    from repro.sweep import SweepRunner, comparison_report
+    from repro.sweep.report import training_rows
+
+    serve = dict(n_requests=6, arrival="poisson", policy="fcfs",
+                 schedule="pipe", n_microbatches=4, candidate_seed=1,
+                 candidates=None)
+    specs = [_spec(train_share=s, name=f"mix{s}", **serve)
+             for s in (0.0, 0.5)]
+    results = SweepRunner(workers=0).run(specs)
+    mixed = next(r for r in results if r.spec.train_share == 0.5)
+    assert mixed.mode_split and set(mixed.mode_split) <= {"IF", "TR"}
+    rows = training_rows(results)
+    assert len(rows) == 1 and rows[0]["train_share"] == 0.5
+    assert rows[0]["all_if_acceptance"] is not None  # twin was paired
+    report = comparison_report(results)
+    tc = report["training_contention"]
+    assert tc["n_scenarios"] == 1
+    assert (tc["n_train_requests"] + tc["n_inference_requests"]) == 6
+    # artifacts: per-mode columns land in the CSV, JSON reloads bit-equal
+    paths = write_artifacts(tmp_path, "mix", results)
+    header = paths["csv"].read_text().splitlines()[0].split(",")
+    for col in ("train_share", "tr_acceptance_ratio", "if_acceptance_ratio",
+                "tr_latency_p95_s", "if_latency_p95_s"):
+        assert col in header
+    _, loaded = load_artifact(paths["json"])
+    reloaded = next(r for r in loaded if r.spec.train_share == 0.5)
+    assert reloaded.mode_split == mixed.mode_split

@@ -1,0 +1,466 @@
+"""Round-trip training pipelines (docs/training.md).
+
+Locks down the ``mode=TR, schedule=pipe, M > 1`` round-trip model end to end:
+
+* closed form vs classic GPipe schedule length on a uniform chain;
+* closed form vs an independent discrete-event F-then-B replay
+  (``msl.simulator.executed_round_trip_s``) to 1e-9 relative;
+* pipe-TR never slower than seq-TR (same plan and solver-vs-solver);
+* scalar/JAX TR-pipe bit parity;
+* EvalCache key disjointness across directions and (mode, schedule, M),
+  including ``fork_fits`` shared-comp semantics, and PlanCache ``solve_key``
+  disjointness;
+* pinned regression anchors: seq+TR and every IF path is bit-for-bit the
+  pre-round-trip evaluator (the dispatch must never reroute them).
+"""
+import random
+
+import pytest
+
+from repro.core import (
+    BW,
+    FW,
+    IF,
+    PIPE,
+    TR,
+    ComputeModel,
+    EvalCache,
+    LayerProfile,
+    LinkSpec,
+    ModelProfile,
+    NodeSpec,
+    PhysicalNetwork,
+    Plan,
+    PlanEvaluator,
+    ProblemInstance,
+    ServiceChainRequest,
+    nsfnet,
+    resnet101_profile,
+    solve,
+)
+from repro.core.trainpipe import (
+    evaluate_round_trip,
+    round_trip_bottleneck_s,
+    round_trip_stage_times,
+    round_trip_taus,
+    segment_comp_dir_s,
+)
+from repro.msl.simulator import executed_round_trip_s
+from repro.sweep.spec import candidate_sets
+from repro.sweep.suites import DEST, NSFNET_NODES, SOURCE
+
+GB = 1024**3
+
+NET = nsfnet(source=SOURCE)
+PROF = resnet101_profile()
+
+
+def _nsfnet_problem(mode=TR, K=3, b=128, seed=0, schedule=PIPE, M=4,
+                    per_stage=2) -> ProblemInstance:
+    cands = candidate_sets(K, seed, NSFNET_NODES, SOURCE, DEST,
+                           per_stage=per_stage)
+    req = ServiceChainRequest(
+        model_id=PROF.model_id, source=SOURCE, destination=DEST,
+        batch_size=b, mode=mode, schedule=schedule, n_microbatches=M)
+    return ProblemInstance(NET, PROF, req, K, tuple(tuple(c) for c in cands))
+
+
+def _random_instance(seed: int, n_nodes: int = 6, L: int = 6, K: int = 3,
+                     schedule: str = PIPE, M: int = 4):
+    """Random TR instance (same family as test_core_solvers, forced TR)."""
+    rng = random.Random(seed)
+    net = PhysicalNetwork()
+    names = [f"n{i}" for i in range(n_nodes)]
+    for i, name in enumerate(names):
+        cm = ComputeModel(
+            name=f"dev{i}",
+            pieces=((float("inf"), rng.uniform(1e-12, 2e-10), 1e-12),),
+            alpha_tau=rng.choice([0.0, 2e-13]), beta_tau=0.0)
+        cap = rng.uniform(0.4, 4.0) * GB
+        net.add_node(NodeSpec(name, cm, cap, cap))
+    edges = {(i, (i + 1) % n_nodes) for i in range(n_nodes)}
+    for i in range(n_nodes):
+        for j in range(i + 1, n_nodes):
+            if rng.random() < 0.4:
+                edges.add((i, j))
+    for i, j in edges:
+        d = rng.uniform(1e-3, 15e-3)
+        bw = rng.choice([0.5e9, 1e9, 2e9])
+        net.add_bidirectional(names[i], names[j], LinkSpec(bw, bw, d, d))
+    layers = []
+    for l in range(L):
+        fw = rng.uniform(0.1, 8.0) * 1e9
+        act = rng.uniform(0.01, 3.0) * 1e6
+        mem = rng.uniform(1, 300) * 1e6
+        layers.append(LayerProfile(f"l{l}", fw, 2 * fw, act, act, mem, mem))
+    prof = ModelProfile("rand", layers)
+    s, d = names[0], names[-1]
+    mids = names[1:-1]
+    cands = ([[s]] + [rng.sample(mids, k=min(2, len(mids)))
+                      for _ in range(K - 2)] + [[d]])
+    b = rng.choice([4, 32, 128])
+    req = ServiceChainRequest("rand", s, d, b, TR, schedule=schedule,
+                              n_microbatches=M)
+    return net, prof, req, K, cands
+
+
+# ------------------------------------------------------- uniform GPipe anchor
+@pytest.mark.parametrize("K,M", [(3, 4), (4, 2), (5, 8)])
+def test_uniform_chain_matches_gpipe_schedule_length(K, M):
+    """A uniform K-stage chain with zero-cost links reproduces the classic
+    GPipe F-then-B makespan (M + K - 1) * (f_mb + b_mb) with per-microbatch
+    stage times f/M, b/M — i.e. (M + K - 1) * (f + b) / M."""
+    net = PhysicalNetwork()
+    cm = ComputeModel(name="dev", pieces=((float("inf"), 1e-11, 0.0),))
+    names = [f"n{i}" for i in range(K)]
+    for name in names:
+        net.add_node(NodeSpec(name, cm, GB, GB))
+    for u, v in zip(names, names[1:]):
+        # zero propagation; act/grad bytes below are 0 so transmission is 0
+        net.add_bidirectional(u, v, LinkSpec(1e9, 1e9, 0.0, 0.0))
+    layers = [LayerProfile(f"l{i}", 1e9, 2e9, 0.0, 0.0, 1.0, 1.0)
+              for i in range(K)]
+    prof = ModelProfile("uniform", layers)
+    req = ServiceChainRequest("uniform", names[0], names[-1], 8, TR,
+                              schedule=PIPE, n_microbatches=M)
+    ev = PlanEvaluator(net, prof, req)
+    plan = Plan(segments=[(i + 1, i + 1) for i in range(K)],
+                placement=list(names),
+                paths=[[u, v] for u, v in zip(names, names[1:])],
+                tail_path=[])
+    f = segment_comp_dir_s(ev, names[0], 1, 1, FW)
+    b = segment_comp_dir_s(ev, names[0], 1, 1, BW)
+    assert f > 0 and b == 2 * f  # uniform stages, BW flops = 2x FW
+    out = evaluate_round_trip(ev, plan, M)
+    assert out.total_s == pytest.approx((M + K - 1) * (f + b) / M, rel=1e-12)
+    # and the independent event replay agrees exactly on this chain
+    assert executed_round_trip_s(ev, plan, M) == pytest.approx(
+        out.total_s, rel=1e-12)
+
+
+# ------------------------------------------- closed form == discrete-event sim
+@pytest.mark.parametrize("M", [2, 4, 7])
+def test_closed_form_matches_event_replay_nsfnet(M):
+    """Acceptance anchor: trainpipe's closed form equals the independently
+    coded discrete-event GPipe replay of the executed chain on an NSFNET
+    scenario, to 1e-9 relative."""
+    p = _nsfnet_problem(M=M)
+    res = solve(p, "bcd", cache=EvalCache())
+    assert res.feasible
+    ev = PlanEvaluator(NET, PROF, p.request)
+    closed = evaluate_round_trip(ev, res.plan, M).total_s
+    assert closed == pytest.approx(res.latency_s, rel=1e-12)
+    executed = executed_round_trip_s(ev, res.plan, M)
+    assert executed == pytest.approx(closed, rel=1e-9)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_closed_form_matches_event_replay_random(seed):
+    net, prof, req, K, cands = _random_instance(seed)
+    res = solve(ProblemInstance(net, prof, req, K,
+                                tuple(tuple(c) for c in cands)),
+                "exact", cache=EvalCache())
+    if not res.feasible:
+        return
+    ev = PlanEvaluator(net, prof, req)
+    M = req.microbatches()
+    closed = evaluate_round_trip(ev, res.plan, M).total_s
+    assert executed_round_trip_s(ev, res.plan, M) == pytest.approx(
+        closed, rel=1e-9)
+
+
+# ---------------------------------------------------------- pipe-TR <= seq-TR
+@pytest.mark.parametrize("b,K,M", [(2, 3, 4), (128, 3, 4), (128, 3, 16),
+                                   (32, 5, 4)])
+def test_pipe_tr_never_slower_than_seq_tr_nsfnet(b, K, M):
+    """Quick-tier acceptance bound: the pipelined training solve is <= the
+    sequential training solve (M = 1 is the seq chain; more microbatches
+    only overlap work).  BCD is the production solver of the sweep tiers;
+    its seq-anchor makes the bound unconditional (docs/pipeline.md)."""
+    seq = _nsfnet_problem(K=K, b=b, schedule="seq", M=1)
+    pipe = _nsfnet_problem(K=K, b=b, schedule=PIPE, M=M)
+    r_seq = solve(seq, "bcd", cache=EvalCache())
+    r_pipe = solve(pipe, "bcd", cache=EvalCache())
+    assert r_seq.feasible and r_pipe.feasible
+    assert r_pipe.latency_s <= r_seq.latency_s + 1e-12
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pipe_tr_never_slower_than_seq_tr_random(seed):
+    net, prof, req, K, cands = _random_instance(seed)
+    seq_req = ServiceChainRequest(req.model_id, req.source, req.destination,
+                                  req.batch_size, TR)
+    cand_t = tuple(tuple(c) for c in cands)
+    r_seq = solve(ProblemInstance(net, prof, seq_req, K, cand_t),
+                  "exact", cache=EvalCache())
+    r_pipe = solve(ProblemInstance(net, prof, req, K, cand_t),
+                   "exact", cache=EvalCache())
+    assert r_seq.feasible == r_pipe.feasible
+    if not r_seq.feasible:
+        return
+    assert r_pipe.latency_s <= r_seq.latency_s + 1e-12
+    # same-plan dominance: evaluating the seq optimum under the round-trip
+    # model can only shrink it (t/M fill + (M-1)/M two-bottleneck drain)
+    ev = PlanEvaluator(net, prof, req)
+    M = req.microbatches()
+    rt = evaluate_round_trip(ev, r_seq.plan, M).total_s
+    assert rt <= r_seq.latency_s + 1e-12
+
+
+def test_round_trip_decomposition_identities():
+    """tau_fw/tau_bw are the max per-direction stage times; the bottleneck
+    period is their sum; the bubble term is (M-1)/M of it."""
+    M = 4
+    p = _nsfnet_problem(M=M)
+    res = solve(p, "bcd", cache=EvalCache())
+    ev = PlanEvaluator(NET, PROF, p.request)
+    fw_times, bw_times = round_trip_stage_times(ev, res.plan)
+    tau_fw, tau_bw = round_trip_taus(ev, res.plan)
+    assert tau_fw == max(fw_times) and tau_bw == max(bw_times)
+    assert round_trip_bottleneck_s(ev, res.plan) == tau_fw + tau_bw
+    out = evaluate_round_trip(ev, res.plan, M)
+    assert out.bubble_s == (M - 1) * (tau_fw + tau_bw) / M
+    # fill = everything but the bubble; stage times enter at their 1/M share
+    assert out.computation_s + out.transmission_s == pytest.approx(
+        (sum(fw_times) + sum(bw_times)) / M, rel=1e-12)
+
+
+# ------------------------------------------------------- scalar/JAX bit parity
+@pytest.mark.parametrize("b,M,seed", [(2, 4, 0), (128, 4, 0), (128, 16, 1),
+                                      (32, 2, 2)])
+def test_tr_pipe_jax_parity_bitwise(b, M, seed):
+    """JAX TR-pipe twins return bit-identical plans and breakdowns."""
+    p = _nsfnet_problem(b=b, M=M, seed=seed)
+    for np_solver, jax_solver in (("dfts_np", "dfts_jax"),
+                                  ("bcd", "bcd_jax")):
+        ref = solve(p, np_solver, cache=EvalCache())
+        acc = solve(p, jax_solver, cache=EvalCache())
+        assert ref.feasible == acc.feasible
+        if not ref.feasible:
+            continue
+        assert acc.plan == ref.plan
+        assert acc.latency_s == ref.latency_s
+        assert acc.latency == ref.latency  # full LatencyBreakdown, bit-equal
+
+
+# --------------------------------------------------------- cache disjointness
+def test_evalcache_direction_keys_disjoint_from_fused():
+    """Per-direction comp entries (8-tuples) never alias fused entries
+    (7-tuples) inside one shared EvalCache, across every (mode, schedule, M)
+    variant of the same (network, profile)."""
+    cache = EvalCache()
+    variants = [
+        ServiceChainRequest(PROF.model_id, SOURCE, DEST, 32, IF),
+        ServiceChainRequest(PROF.model_id, SOURCE, DEST, 32, TR),
+        ServiceChainRequest(PROF.model_id, SOURCE, DEST, 32, IF,
+                            schedule=PIPE, n_microbatches=4),
+        ServiceChainRequest(PROF.model_id, SOURCE, DEST, 32, TR,
+                            schedule=PIPE, n_microbatches=4),
+        ServiceChainRequest(PROF.model_id, SOURCE, DEST, 32, TR,
+                            schedule=PIPE, n_microbatches=8),
+    ]
+    fused, directional = {}, {}
+    for req in variants:
+        ev = PlanEvaluator(NET, PROF, req, cache=cache)
+        fused[(req.mode, req.schedule, req.n_microbatches)] = \
+            ev.segment_comp_s("v7", 1, 10)
+        directional[(req.mode, req.schedule, req.n_microbatches)] = (
+            segment_comp_dir_s(ev, "v7", 1, 10, FW),
+            segment_comp_dir_s(ev, "v7", 1, 10, BW))
+    lens = {len(k) for k in cache.comp}
+    assert lens == {7, 8}
+    # one entry per variant per shape — (mode, schedule, M) keys never collide
+    assert len([k for k in cache.comp if len(k) == 7]) == len(variants)
+    assert len([k for k in cache.comp if len(k) == 8]) == 2 * len(variants)
+    # shared-cache values equal fresh-cache values (no cross-contamination)
+    for req in variants:
+        ev = PlanEvaluator(NET, PROF, req)  # private cache
+        key = (req.mode, req.schedule, req.n_microbatches)
+        assert fused[key] == ev.segment_comp_s("v7", 1, 10)
+        assert directional[key] == (
+            segment_comp_dir_s(ev, "v7", 1, 10, FW),
+            segment_comp_dir_s(ev, "v7", 1, 10, BW))
+    # TR fused = FW + BW flops through one Eq.17 call; per-direction entries
+    # are real splits of it (device overhead tau is charged per pass)
+    fw, bw = directional[(TR, PIPE, 4)]
+    assert fw + bw >= fused[(TR, PIPE, 4)] - 1e-15
+
+
+def test_evalcache_fork_fits_shares_comp_only():
+    cache = EvalCache()
+    req = ServiceChainRequest(PROF.model_id, SOURCE, DEST, 32, TR,
+                              schedule=PIPE, n_microbatches=4)
+    ev = PlanEvaluator(NET, PROF, req, cache=cache)
+    segment_comp_dir_s(ev, "v7", 1, 10, FW)
+    ev.segment_fits("v7", 1, 10)
+    fork = cache.fork_fits()
+    assert fork.comp is cache.comp  # per-direction entries travel with it
+    assert fork.fits is not cache.fits and not fork.fits
+    assert fork.hits == fork.misses == 0  # fork counts its own traffic
+    # a hit through the fork finds the per-direction entry without recompute
+    misses_before = fork.misses
+    ev_fork = PlanEvaluator(NET, PROF, req, cache=fork)
+    segment_comp_dir_s(ev_fork, "v7", 1, 10, FW)
+    assert fork.hits == 1 and fork.misses == misses_before
+
+
+def test_plancache_solve_keys_disjoint_across_mode_schedule_m():
+    """ServeRequest.solve_key (the PlanCache key) separates every
+    (mode, schedule, M) variant of an otherwise identical request."""
+    from repro.serve.plancache import PlanCache
+    from repro.serve.requests import ServeRequest
+
+    cands = tuple(tuple(c) for c in candidate_sets(
+        3, 0, NSFNET_NODES, SOURCE, DEST, per_stage=2))
+
+    def req(mode, schedule, M):
+        return ServeRequest(request_id=0, source=SOURCE, destination=DEST,
+                            batch_size=32, mode=mode, K=3, candidates=cands,
+                            schedule=schedule, n_microbatches=M)
+
+    variants = [req(IF, "seq", 1), req(TR, "seq", 1), req(IF, PIPE, 4),
+                req(TR, PIPE, 4), req(TR, PIPE, 8)]
+    keys = [r.solve_key(NET, PROF) for r in variants]
+    assert len(set(keys)) == len(keys)
+    # pipe with M=1 *is* the seq problem — the canonical content key folds it
+    assert req(TR, PIPE, 1).solve_key(NET, PROF) == keys[1]
+    # a TR-pipe outcome cached under its key is invisible to every other shape
+    pc = PlanCache()
+    outcome = solve(variants[3].problem(NET, PROF), "bcd",
+                    cache=EvalCache())
+    pc.put(keys[3], outcome)
+    assert pc.get(keys[3]) is outcome
+    for k in (keys[0], keys[1], keys[2], keys[4]):
+        assert pc.get(k) is None
+
+
+# ------------------------------------------------- pinned regression anchors
+# Solver optima on the frozen NSFNET + resnet101 cell (K=3, seed-0
+# candidates).  seq and IF values are pinned bit-for-bit: the round-trip
+# dispatch must never reroute them.  The TR-pipe value pins the round-trip
+# model itself against silent drift (BCD hits the exact TR-pipe optimum on
+# this cell; the exact pair scan is too slow for the tier-1 suite).
+_ANCHORS = [
+    (IF, "seq", 1, 2, "exact", 0.04873493287462196),
+    (IF, "seq", 1, 128, "exact", 2.6041812386841823),
+    (TR, "seq", 1, 2, "exact", 0.10346391025679992),
+    (TR, "seq", 1, 128, "exact", 5.337803813709429),
+    (IF, PIPE, 4, 32, "exact", 0.2819212978341422),
+    (TR, PIPE, 4, 128, "bcd", 2.5889623007019544),
+]
+
+
+@pytest.mark.parametrize("mode,schedule,M,b,solver,pinned", _ANCHORS)
+def test_pinned_anchors(mode, schedule, M, b, solver, pinned):
+    p = _nsfnet_problem(mode=mode, K=3, b=b, seed=0, schedule=schedule, M=M)
+    res = solve(p, solver, cache=EvalCache())
+    assert res.feasible
+    assert res.latency_s == pinned  # bit-for-bit, not approx
+
+
+def test_non_round_trip_paths_never_touch_trainpipe(monkeypatch):
+    """seq+TR, every IF shape, and TR-pipe with M=1 stay on the fused
+    evaluators — poison evaluate_round_trip and make sure nobody calls it."""
+    import repro.core.trainpipe as trainpipe_mod
+
+    def _boom(*a, **k):
+        raise AssertionError("fused path reached the round-trip evaluator")
+
+    monkeypatch.setattr(trainpipe_mod, "evaluate_round_trip", _boom)
+    fused_cells = [
+        (IF, "seq", 1, 2), (TR, "seq", 1, 128),
+        (IF, PIPE, 4, 32), (TR, PIPE, 1, 128),
+    ]
+    for mode, schedule, M, b in fused_cells:
+        p = _nsfnet_problem(mode=mode, b=b, schedule=schedule, M=M)
+        res = solve(p, "exact", cache=EvalCache())
+        assert res.feasible
+    # and the poisoned module IS what the dispatch would call for TR-pipe M>1
+    p = _nsfnet_problem(mode=TR, b=128, schedule=PIPE, M=4)
+    ev = PlanEvaluator(NET, PROF, p.request)
+    plan = Plan(segments=[(1, 12), (13, 24), (25, 37)],
+                placement=[SOURCE, "v11", DEST],
+                paths=[NET.shortest_path(SOURCE, "v11", 0.0, None)[1],
+                       NET.shortest_path("v11", DEST, 0.0, None)[1]],
+                tail_path=[])
+    with pytest.raises(AssertionError, match="round-trip"):
+        ev.evaluate(plan)
+
+
+def test_exact_leq_every_bruteforce_round_trip_plan():
+    """The TR-pipe exact optimum lower-bounds an exhaustive enumeration of
+    (segmentation, placement) plans with shortest-hop subpaths."""
+    import itertools
+
+    net, prof, req, K, cands = _random_instance(1, n_nodes=5, L=5, K=3)
+    res = solve(ProblemInstance(net, prof, req, K,
+                                tuple(tuple(c) for c in cands)),
+                "exact", cache=EvalCache())
+    ev = PlanEvaluator(net, prof, req)
+    M = req.microbatches()
+    best = float("inf")
+    L = prof.L
+    for cuts in itertools.combinations(range(1, L), K - 1):
+        segs, lo = [], 1
+        for c in list(cuts) + [L]:
+            segs.append((lo, c))
+            lo = c + 1
+        for placement in itertools.product(*cands):
+            if not all(ev.segment_fits(n, lo_, hi_)
+                       for (lo_, hi_), n in zip(segs, placement)):
+                continue
+            try:
+                paths = []
+                b = req.batch_size
+                for k in range(K - 1):
+                    fw = b * prof.cut_bytes(segs[k][1], FW)
+                    bw = b * prof.cut_bytes(segs[k][1], BW)
+                    _, path = net.shortest_path(placement[k],
+                                                placement[k + 1], fw, bw)
+                    paths.append(path)
+                _, tail = net.shortest_path(placement[-1], req.destination,
+                                            0.0, 0.0)
+            except ValueError:
+                continue
+            plan = Plan(segments=segs, placement=list(placement),
+                        paths=paths, tail_path=tail)
+            best = min(best, evaluate_round_trip(ev, plan, M).total_s)
+    if best == float("inf"):
+        assert not res.feasible
+    else:
+        assert res.feasible
+        assert res.latency_s <= best + 1e-12
+
+
+# ------------------------------------------------------ serve-layer TR clamp
+def test_effective_rate_clamped_by_round_trip_period():
+    from repro.serve.requests import ServeRequest
+    from repro.serve.residual import effective_rate_rps
+
+    cands = tuple(tuple(c) for c in candidate_sets(
+        3, 0, NSFNET_NODES, SOURCE, DEST, per_stage=2))
+    p = _nsfnet_problem(mode=TR, b=128, M=4)
+    res = solve(p, "bcd", cache=EvalCache())
+    ev = PlanEvaluator(NET, PROF, p.request)
+    period = round_trip_bottleneck_s(ev, res.plan)
+    assert period > 0
+
+    def serve_req(rate, mode=TR, schedule=PIPE, M=4):
+        return ServeRequest(request_id=0, source=SOURCE, destination=DEST,
+                            batch_size=128, mode=mode, K=3, candidates=cands,
+                            rate_rps=rate, model_id=PROF.model_id,
+                            schedule=schedule, n_microbatches=M)
+
+    # above the sustainable rate: clamped to one round trip per period
+    high = effective_rate_rps(PROF, serve_req(1e9), res.plan, NET)
+    assert high == pytest.approx(1.0 / period, rel=1e-12)
+    # below it: the requested rate stands
+    assert effective_rate_rps(PROF, serve_req(1e-3), res.plan, NET) == 1e-3
+    # sequential training chains are never clamped
+    assert effective_rate_rps(
+        PROF, serve_req(1e9, schedule="seq", M=1), res.plan, NET) == 1e9
+    # the TR clamp (two-direction period) is at least as tight as the
+    # forward-only clamp an IF chain with the same shape would get
+    if_req = serve_req(1e9, mode=IF)
+    if_rate = effective_rate_rps(PROF, if_req, res.plan, NET)
+    assert high <= if_rate + 1e-15
