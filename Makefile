@@ -3,11 +3,11 @@ export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: verify verify-fast test test-fast sweep-quick bench-quick \
 	bench-solver bench-solver-smoke bench-serve bench-serve-smoke \
-	docs-check clean
+	lint docs-check clean
 
-## verify: tier-1 tests + one quick end-to-end sweep + the batched-solver
-## and serving-gateway throughput smoke gates (the CI gate)
-verify: test sweep-quick bench-solver-smoke bench-serve-smoke
+## verify: repro-lint gate + tier-1 tests + one quick end-to-end sweep + the
+## batched-solver and serving-gateway throughput smoke gates (the CI gate)
+verify: lint test sweep-quick bench-solver-smoke bench-serve-smoke
 
 ## verify-fast: the core dev loop (<45s) — deselects the multi-minute
 ## jax-stack tests (pytest -m slow: shard_map subprocess runs, kernel
@@ -56,6 +56,17 @@ bench-serve:
 ## throughput must clear the admissions/s floor (docs/gateway.md)
 bench-serve-smoke:
 	$(PYTHON) -m benchmarks.serve_throughput --smoke
+
+## lint: repro-lint in --strict mode (docs/analysis.md) + ruff's pyflakes
+## tier as the generic complement where installed (CI installs it; local
+## trees without ruff still get the full repro-lint gate)
+lint:
+	$(PYTHON) -m repro.analysis --strict src/repro
+	@if command -v ruff > /dev/null 2>&1; then \
+		ruff check src/repro; \
+	else \
+		echo "ruff not installed; skipped the generic pyflakes tier"; \
+	fi
 
 ## docs-check: CLIs import/--help cleanly and docs/*.md links are unbroken
 docs-check:

@@ -1,87 +1,26 @@
 #!/usr/bin/env python
-"""Docs-sync smoke check (CI): every docs/*.md file referenced from README.md
-and from other docs exists, and every docs/*.md on disk is reachable from
-README.md (no orphaned documentation).  Exits non-zero with a report on
-drift."""
+"""Docs-sync smoke check (CI) — thin alias over the ``docs-sync`` rule in
+``repro.analysis.rules_docs`` (same REQUIRED_DOCUMENTED semantics, same
+failure messages).  Kept so existing workflows (`make docs-check`, the CI
+docs job) don't break; the full linter is ``python -m repro.analysis``."""
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-LINK_RE = re.compile(r"\(((?:docs/)?[\w.-]+\.md)(?:#[\w-]+)?\)")
-SRC_RE = re.compile(r"`(src/repro/[\w/.]+\.py)`")
+if str(ROOT / "src") not in sys.path:  # standalone runs without PYTHONPATH=src
+    sys.path.insert(0, str(ROOT / "src"))
 
-# Modules the docs must both mention and that must exist on disk — the
-# subsystem map in docs/architecture.md and the solver guide go stale
-# silently otherwise.
-REQUIRED_DOCUMENTED = (
-    "src/repro/core/jax_solvers.py",
-    "src/repro/kernels/minplus.py",
-    "src/repro/serve/gateway.py",
-    "src/repro/serve/failures.py",
-    "src/repro/core/trainpipe.py",
-)
-
-
-def doc_links(path: Path) -> set[Path]:
-    """docs/*.md paths referenced by markdown links in `path` (repo-relative)."""
-    out = set()
-    for target in LINK_RE.findall(path.read_text()):
-        if target.startswith("docs/"):
-            out.add(ROOT / target)
-        elif path.parent == ROOT / "docs":
-            out.add(ROOT / "docs" / target)
-    return out
+from repro.analysis.rules_docs import docs_sync_errors  # noqa: E402
 
 
 def main() -> int:
-    errors: list[str] = []
-    readme = ROOT / "README.md"
-    reachable = doc_links(readme)
-    for doc in sorted((ROOT / "docs").glob("*.md")):
-        reachable |= doc_links(doc)
-
-    for ref in sorted(reachable):
-        if not ref.exists():
-            errors.append(f"broken doc link: {ref.relative_to(ROOT)}")
-
-    readme_reachable = doc_links(readme)
-    frontier = list(readme_reachable)
-    while frontier:  # transitive closure from README
-        doc = frontier.pop()
-        if not doc.exists():
-            continue
-        for ref in doc_links(doc):
-            if ref not in readme_reachable:
-                readme_reachable.add(ref)
-                frontier.append(ref)
-    for doc in sorted((ROOT / "docs").glob("*.md")):
-        if doc not in readme_reachable:
-            errors.append(f"orphaned doc (not reachable from README.md): "
-                          f"{doc.relative_to(ROOT)}")
-
-    # source modules referenced by full path in docs must exist on disk ...
-    all_docs = [readme] + sorted((ROOT / "docs").glob("*.md"))
-    docs_text = "\n".join(d.read_text() for d in all_docs)
-    for mod in sorted(set(SRC_RE.findall(docs_text))):
-        if not (ROOT / mod).exists():
-            errors.append(f"doc references missing source module: {mod}")
-    # ... and the mapped subsystems must stay documented (by basename)
-    for mod in REQUIRED_DOCUMENTED:
-        path = ROOT / mod
-        if not path.exists():
-            errors.append(f"required module missing from tree: {mod}")
-        if path.name not in docs_text:
-            errors.append(f"module {mod} is not mentioned anywhere in "
-                          f"README.md or docs/ (update docs/architecture.md "
-                          f"and docs/solvers.md)")
-
+    errors, n_reachable = docs_sync_errors(ROOT)
     if errors:
         print("\n".join(errors), file=sys.stderr)
         return 1
-    print(f"docs-sync ok: {len(readme_reachable)} docs reachable from README.md")
+    print(f"docs-sync ok: {n_reachable} docs reachable from README.md")
     return 0
 
 

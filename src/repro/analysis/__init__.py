@@ -1,0 +1,30 @@
+"""repro-lint — AST-based static enforcement of this repo's correctness
+conventions (docs/analysis.md).
+
+The headline guarantees elsewhere in the tree — NumPy/JAX bit-parity,
+conservation-exact residual accounting, content-hash plan caching — all rest
+on conventions (arity-disjoint cache-key families, seeded RNG on solver
+paths, registry capability declarations matching solver bodies, every
+``ScenarioSpec`` knob hash-relevant).  This package turns those house rules
+into machine-checked invariants with rule-named diagnostics:
+
+* :mod:`repro.analysis.base` — ``Rule`` protocol, ``Finding``,
+  ``ProjectContext``, the driver (``run_analysis``);
+* :mod:`repro.analysis.baseline` — accepted-finding suppression file;
+* :mod:`repro.analysis.cli` — ``python -m repro.analysis`` (exit-code
+  contract: 0 clean / 1 findings / 2 usage error);
+* ``rules_cache`` / ``rules_determinism`` / ``rules_registry`` /
+  ``rules_spec`` / ``rules_hygiene`` / ``rules_docs`` — the rule catalog.
+
+Pure stdlib by design: the linter runs in environments without the
+scientific stack (the CI docs job, pre-commit hooks).
+"""
+from .base import (Finding, ModuleInfo, ProjectContext, Rule, get_rules,
+                   register_rule, rule_names, run_analysis)
+from .baseline import Baseline, load_baseline, save_baseline
+
+__all__ = [
+    "Finding", "ModuleInfo", "ProjectContext", "Rule",
+    "get_rules", "register_rule", "rule_names", "run_analysis",
+    "Baseline", "load_baseline", "save_baseline",
+]

@@ -1,0 +1,6 @@
+"""Entry point: ``python -m repro.analysis`` (see cli.py for the contract)."""
+import sys
+
+from .cli import main
+
+sys.exit(main())

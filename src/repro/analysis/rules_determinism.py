@@ -1,0 +1,121 @@
+"""Rule ``determinism``: no wall clock, no unseeded RNG on solver/sim paths.
+
+Bit-parity harnesses (NumPy vs JAX solvers), conservation replay
+(``replay_verify_sim``) and content-hash caching all assume solver, serve,
+MSL and sweep code is a *deterministic function of its inputs*.  This rule
+flags, inside the checked subtrees (``core/``, ``serve/``, ``msl/``,
+``sweep/`` — ``launch/`` and ``benchmarks/`` are allowlisted because
+launching and benchmarking legitimately read the clock):
+
+* wall-clock reads: ``time.time()``, ``time.time_ns()``,
+  ``datetime.now()`` / ``utcnow()`` / ``today()`` — replayable code takes
+  timestamps as parameters; interval timing uses ``time.perf_counter()``
+  (monotonic, never used as data), which is allowed;
+* module-level global-state RNG: ``np.random.<sampler>`` and stdlib
+  ``random.<sampler>`` calls — these draw from hidden global streams that
+  any import can perturb;
+* unseeded generator construction: ``np.random.default_rng()`` /
+  ``random.Random()`` with no seed argument.
+
+Seeded construction (``random.Random(seed)``, ``default_rng(seed)``,
+``np.random.Philox(key=...)``) and the functional ``jax.random`` API are the
+approved idioms and pass untouched.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .astutil import dotted_name
+from .base import Finding, ModuleInfo, ProjectContext, Rule, register_rule
+
+CHECKED_DIRS = frozenset({"core", "serve", "msl", "sweep"})
+ALLOWED_DIRS = frozenset({"launch", "benchmarks"})  # timing is their job
+
+WALL_CLOCK = {
+    "time.time": "time.time()",
+    "time.time_ns": "time.time_ns()",
+    "datetime.now": "datetime.now()",
+    "datetime.utcnow": "datetime.utcnow()",
+    "datetime.today": "datetime.today()",
+    "date.today": "date.today()",
+}
+
+NP_SAMPLERS = frozenset({
+    "rand", "randn", "randint", "random", "random_sample", "choice",
+    "shuffle", "permutation", "uniform", "normal", "standard_normal",
+    "poisson", "exponential", "binomial", "beta", "gamma", "seed",
+})
+PY_SAMPLERS = frozenset({
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "expovariate",
+    "betavariate", "triangular", "seed", "getrandbits",
+})
+
+_RNG_FIX = ("thread a seeded generator from the caller "
+            "(random.Random(seed) / np.random.default_rng(seed)) instead of "
+            "the global stream")
+_CLOCK_FIX = ("wall-clock reads break replay determinism; take timestamps "
+              "as parameters, or use time.perf_counter() for wall-time "
+              "stats that are never inputs")
+
+
+def _in_scope(relpath: str) -> bool:
+    parts = relpath.split("/")[:-1]
+    if any(p in ALLOWED_DIRS for p in parts):
+        return False
+    return any(p in CHECKED_DIRS for p in parts)
+
+
+@register_rule
+class DeterminismRule(Rule):
+    name = "determinism"
+    description = ("no wall-clock or unseeded/global RNG in core/, serve/, "
+                   "msl/, sweep/ (launch/ and benchmarks are allowlisted)")
+
+    def check_module(self, module: ModuleInfo,
+                     ctx: ProjectContext) -> Iterator[Finding]:
+        if not _in_scope(module.relpath):
+            return
+        noqa = module.noqa_lines()
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call) or node.lineno in noqa:
+                continue
+            dn = dotted_name(node.func)
+            if dn is None:
+                continue
+            # wall clock --------------------------------------------------
+            for suffix, label in WALL_CLOCK.items():
+                if dn == suffix or dn.endswith("." + suffix):
+                    yield Finding(
+                        self.name, module.relpath, node.lineno,
+                        f"wall-clock call {label} in deterministic path",
+                        _CLOCK_FIX)
+                    break
+            else:
+                parts = dn.split(".")
+                # numpy global-state RNG ----------------------------------
+                if (len(parts) >= 3 and parts[-2] == "random"
+                        and parts[0] in ("np", "numpy")
+                        and parts[-1] in NP_SAMPLERS):
+                    yield Finding(
+                        self.name, module.relpath, node.lineno,
+                        f"global-stream RNG call {dn}()", _RNG_FIX)
+                elif dn.endswith("random.default_rng") and not (
+                        node.args or node.keywords):
+                    yield Finding(
+                        self.name, module.relpath, node.lineno,
+                        "unseeded np.random.default_rng()",
+                        "pass an explicit seed: np.random.default_rng(seed)")
+                # stdlib global-state RNG ---------------------------------
+                elif (len(parts) == 2 and parts[0] == "random"
+                        and parts[1] in PY_SAMPLERS):
+                    yield Finding(
+                        self.name, module.relpath, node.lineno,
+                        f"global-stream RNG call {dn}()", _RNG_FIX)
+                elif dn == "random.Random" and not (
+                        node.args or node.keywords):
+                    yield Finding(
+                        self.name, module.relpath, node.lineno,
+                        "unseeded random.Random()",
+                        "pass an explicit seed: random.Random(seed)")

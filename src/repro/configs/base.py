@@ -16,7 +16,7 @@ executed under one `lax.scan` with stacked params, the remainder is unrolled.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

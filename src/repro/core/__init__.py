@@ -24,10 +24,10 @@ Registered solvers:
 The flat `*_solve` functions are kept as deprecated shims (one
 DeprecationWarning per process; bit-for-bit identical plans).
 """
-from . import baselines as _baselines  # registers comp-ms / comm-ms
-from . import bcd as _bcd  # registers bcd
-from . import exact as _exact  # registers exact
-from . import ilp as _ilp  # registers ilp
+from . import baselines as _baselines  # noqa: F401 (registers comp-ms / comm-ms)
+from . import bcd as _bcd  # noqa: F401 (registers bcd)
+from . import exact as _exact  # noqa: F401 (registers exact)
+from . import ilp as _ilp  # noqa: F401 (registers ilp)
 from .costmodel import (
     BW,
     FW,

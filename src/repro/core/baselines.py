@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import time
 
-from .costmodel import BW, FW, PIPE, SEQ, TR, ModelProfile, dirs_for_mode
+from .costmodel import PIPE, SEQ, ModelProfile, dirs_for_mode
 from .dfts import dfts
 from .engine import register_solver
 from .network import PhysicalNetwork

@@ -13,7 +13,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .costmodel import BW, FW, ComputeModel
+from .costmodel import FW, ComputeModel
 
 
 @dataclass(frozen=True)

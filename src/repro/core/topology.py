@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import random
 
-from .costmodel import CPU_XEON_6226R, GPU_RTX_A6000, ComputeModel, tpu_group_compute_model
+from .costmodel import CPU_XEON_6226R, GPU_RTX_A6000, tpu_group_compute_model
 from .network import LinkSpec, NodeSpec, PhysicalNetwork
 
 GB = 1024**3

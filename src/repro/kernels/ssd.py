@@ -20,7 +20,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, a_ref, y_ref, hc_ref, dec_ref):

@@ -4,11 +4,9 @@ Everything operates on ShapeDtypeStructs (eval_shape) — no allocation."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..configs.base import ModelConfig
-from ..models.sharding import MeshRules, param_logical_tree, param_shardings
+from ..models.sharding import MeshRules, param_shardings
 
 
 def replicated(rules: MeshRules) -> NamedSharding:

@@ -12,7 +12,6 @@ states: 1 for inference, ~9 for fp32 AdamW over bf16 compute, ~2.1 adafactor).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 
 from ..configs.base import ModelConfig
 from ..core.costmodel import LayerProfile, ModelProfile

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 
 import jax
 import numpy as np

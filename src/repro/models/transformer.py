@@ -12,8 +12,6 @@ paper's splitting/placement/chaining optimizer can cut.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

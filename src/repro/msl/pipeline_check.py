@@ -14,11 +14,10 @@ def main(arch: str = "qwen3-14b") -> None:
     import numpy as np
 
     from ..configs import ARCHS
-    from ..models import layers as L
     from ..models import transformer as T
     from ..models.layers import Ctx
     from ..optim import make_optimizer
-    from .planner import PipelinePlan, plan_pipeline
+    from .planner import PipelinePlan
     from .pipeline import make_pipeline_mesh, make_pipeline_train_step, \
         pipeline_forward
 

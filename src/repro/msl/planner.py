@@ -14,16 +14,14 @@ from dataclasses import dataclass
 from ..configs.base import ModelConfig
 from ..core import (
     TR,
-    IF,
     LayerProfile,
     ModelProfile,
-    PlanEvaluator,
     ProblemInstance,
     ServiceChainRequest,
     solve,
     tpu_pod_topology,
 )
-from ..models.profiles import model_profile, state_multiplier
+from ..models.profiles import model_profile
 
 
 def group_profile(cfg: ModelConfig, seq_len: int, mode: str = "train",

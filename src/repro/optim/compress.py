@@ -11,8 +11,6 @@ implicit and uncompressed (recorded as such in the roofline's collective term).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ params fit 16 GB/chip HBM alongside bf16 weights (see configs/arctic_480b.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable
 
 import jax

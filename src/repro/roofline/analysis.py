@@ -13,7 +13,7 @@ full bytes, reduce-scatter (n-1)/n x full bytes, all-to-all (n-1)/n, permute 1x)
 from __future__ import annotations
 
 import re
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

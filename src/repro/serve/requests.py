@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core import (IF, SCHEDULES, SEQ, TR, ModelProfile, PhysicalNetwork,
                         ProblemInstance, ServiceChainRequest, candidate_sets)

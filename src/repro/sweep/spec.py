@@ -113,6 +113,16 @@ def build_profile(name: str, kwargs: dict | None = None) -> ModelProfile:
 
 
 # ----------------------------------------------------------------------- spec
+# Fields excluded from the spec content hash (ScenarioSpec.key/spec_hash).
+# THE allowlist the `spec-hash` lint rule (docs/analysis.md) checks: every
+# field popped out of the hash must be declared here with a justification,
+# so a result-changing knob can never silently fall out of cache identity.
+HASH_IRRELEVANT = (
+    "name",  # human label only; renaming a scenario must not re-run it
+    "tags",  # free-form grouping metadata; never read by the runner
+)
+
+
 @dataclass
 class ScenarioSpec:
     """One evaluation grid point, fully determined by plain data."""
@@ -272,10 +282,12 @@ class ScenarioSpec:
         return cls(**d)
 
     def key(self) -> str:
-        """Canonical JSON of the solve-relevant fields (name/tags excluded)."""
+        """Canonical JSON of the solve-relevant fields (exactly the
+        HASH_IRRELEVANT allowlist is excluded — enforced by the `spec-hash`
+        lint rule)."""
         d = self.to_dict()
-        d.pop("name", None)
-        d.pop("tags", None)
+        for f in HASH_IRRELEVANT:
+            d.pop(f, None)
         return json.dumps(d, sort_keys=True, separators=(",", ":"))
 
     def spec_hash(self) -> str:

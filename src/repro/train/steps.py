@@ -6,8 +6,6 @@ difference between fitting and not fitting HBM.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
